@@ -1,0 +1,146 @@
+"""Benchmarks mapping 1:1 to the paper's tables/figures.
+
+Each function returns (rows, headline) where rows are printable dicts and
+headline is the scalar used in run.py's CSV. Monte-Carlo scale is chosen so
+each figure runs in seconds on CPU while matching the paper's configuration
+(Section VII): testbed experiments = 100 jobs x 10 tasks, D in {100,150}s,
+tau_est=40, tau_kill=80, theta=1e-4, beta~2; trace simulation = 2700 jobs /
+~1M tasks, beta in [1.1, 2.0].
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim import (generate, uniform_jobset, SimParams, run_all,
+                       run_strategy)
+from repro.sim.metrics import net_utility
+
+KEY = jax.random.PRNGKey(0)
+
+# paper testbed: tau_est = 40s, tau_kill = 80s with t_min ~ 30s (map tasks);
+# we express them as fractions of t_min as the trace tables do.
+TESTBED_P = SimParams(tau_est_frac=1.33, tau_kill_gap_frac=1.33, phi_est=0.25)
+TRACE_P = SimParams()
+
+
+def fig2_strategies():
+    """Fig 2(a-c): PoCD / cost / net utility for HNS, HS, Clone, S-Restart,
+    S-Resume on four benchmark workloads (Sort/TeraSort: D=100s;
+    SecondarySort/WordCount: D=150s)."""
+    workloads = {
+        "Sort": dict(t_min=30.0, beta=2.0, D=100.0),
+        "TeraSort": dict(t_min=30.0, beta=2.0, D=100.0),
+        "SecondarySort": dict(t_min=35.0, beta=2.0, D=150.0),
+        "WordCount": dict(t_min=35.0, beta=2.0, D=150.0),
+    }
+    rows = []
+    util_gain = []
+    for wname, w in workloads.items():
+        jobs = uniform_jobset(2000, 10, **w)
+        outs, r_min = run_all(KEY, jobs, TESTBED_P, theta=1e-4,
+                              strategies=("hadoop_ns", "hadoop_s", "clone",
+                                          "srestart", "sresume"))
+        for sname, o in outs.items():
+            rows.append({"workload": wname, "strategy": sname,
+                         "pocd": round(float(o.result.pocd), 4),
+                         "cost": round(float(o.result.mean_cost), 1),
+                         "utility": round(float(o.utility), 4)})
+        util_gain.append(float(outs["sresume"].utility) -
+                         float(outs["hadoop_s"].utility))
+    return rows, float(np.mean(util_gain))
+
+
+def table1_tau_est():
+    """Table I: vary tau_est with tau_kill - tau_est fixed at 0.5 t_min."""
+    jobs = generate(n_jobs=2700, seed=0)
+    rows = []
+    for strategy in ("clone", "srestart", "sresume"):
+        fracs = [0.0] if strategy == "clone" else [0.1, 0.3, 0.5]
+        for f in fracs:
+            p = SimParams(tau_est_frac=f, tau_kill_gap_frac=0.5)
+            out = run_strategy(KEY, jobs, strategy, p, theta=1e-4)
+            rows.append({"strategy": strategy, "tau_est": f,
+                         "tau_kill": f + 0.5,
+                         "pocd": round(float(out.result.pocd), 4),
+                         "cost": round(float(out.result.mean_cost), 0),
+                         "utility": round(float(out.utility), 4)})
+    best = max(r["utility"] for r in rows if r["strategy"] == "sresume")
+    return rows, best
+
+
+def table2_tau_kill():
+    """Table II: vary tau_kill with tau_est fixed at 0.3 t_min."""
+    jobs = generate(n_jobs=2700, seed=0)
+    rows = []
+    for strategy in ("clone", "srestart", "sresume"):
+        base = 0.0 if strategy == "clone" else 0.3
+        for gap in (0.1, 0.3, 0.5):
+            p = SimParams(tau_est_frac=base, tau_kill_gap_frac=gap)
+            out = run_strategy(KEY, jobs, strategy, p, theta=1e-4)
+            rows.append({"strategy": strategy, "tau_est": base,
+                         "tau_kill": base + gap,
+                         "pocd": round(float(out.result.pocd), 4),
+                         "cost": round(float(out.result.mean_cost), 0),
+                         "utility": round(float(out.utility), 4)})
+    best = max(r["utility"] for r in rows if r["strategy"] == "sresume")
+    return rows, best
+
+
+def fig3_theta():
+    """Fig 3(a-c): Mantri vs Clone/S-Restart/S-Resume over theta."""
+    jobs = generate(n_jobs=2000, seed=1)
+    rows = []
+    gains = []
+    for theta in (1e-5, 3e-5, 1e-4, 3e-4, 1e-3):
+        outs, r_min = run_all(KEY, jobs, TRACE_P, theta=theta,
+                              strategies=("hadoop_ns", "mantri", "clone",
+                                          "srestart", "sresume"))
+        for sname in ("mantri", "clone", "srestart", "sresume"):
+            o = outs[sname]
+            rows.append({"theta": theta, "strategy": sname,
+                         "pocd": round(float(o.result.pocd), 4),
+                         "cost": round(float(o.result.mean_cost), 0),
+                         "utility": round(float(o.utility), 4),
+                         "mean_r": round(float(jnp.mean(o.r_opt)), 2)})
+        gains.append(float(outs["sresume"].utility) -
+                     float(outs["mantri"].utility))
+    return rows, float(np.mean(gains))
+
+
+def fig4_beta():
+    """Fig 4(a-c): PoCD / cost / utility vs beta (D = 2x mean task time)."""
+    rows = []
+    for beta in (1.1, 1.3, 1.5, 1.7, 1.9):
+        jobs = generate(n_jobs=1500, seed=2, beta_range=(beta, beta + 1e-3),
+                        deadline_ratio=2.0)
+        outs, r_min = run_all(KEY, jobs, TRACE_P, theta=1e-4,
+                              strategies=("hadoop_ns", "hadoop_s", "clone",
+                                          "srestart", "sresume"))
+        for sname, o in outs.items():
+            rows.append({"beta": beta, "strategy": sname,
+                         "pocd": round(float(o.result.pocd), 4),
+                         "cost": round(float(o.result.mean_cost), 0),
+                         "utility": round(float(o.utility), 4)})
+    chronos = [r for r in rows if r["strategy"] == "sresume"]
+    return rows, float(np.mean([r["pocd"] for r in chronos]))
+
+
+def fig5_r_histogram():
+    """Fig 5: histogram of optimal r for Clone and S-Resume at two thetas."""
+    jobs = generate(n_jobs=2700, seed=3)
+    rows = []
+    for strategy in ("clone", "sresume"):
+        for theta in (1e-5, 1e-4):
+            out = run_strategy(KEY, jobs, strategy, TRACE_P, theta=theta)
+            hist = np.bincount(np.asarray(out.r_opt), minlength=9)[:9]
+            rows.append({"strategy": strategy, "theta": theta,
+                         "r_hist": hist.tolist(),
+                         "mode_r": int(np.argmax(hist))})
+    # paper: the modal r* decreases by 1 when theta rises 1e-5 -> 1e-4
+    # (their Fig 5: clone 2->1, s-resume 4->3; exact values depend on C)
+    modes = {(r["strategy"], r["theta"]): r["mode_r"] for r in rows}
+    return rows, float(modes[("clone", 1e-5)] - modes[("clone", 1e-4)])

@@ -1,0 +1,89 @@
+"""Framework performance benchmarks: optimizer/simulator throughput and
+kernel timings (interpret-mode on CPU — indicative, not TPU wall time)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JobSpec, solve_batch_jit
+from repro.sim import generate, SimParams, run_strategy
+from repro.kernels import ops
+
+
+def _time(fn, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_optimizer_throughput(n_jobs=100_000):
+    """Vectorized exact Algorithm-1 solves per second (the AM's hot loop)."""
+    rng = np.random.default_rng(0)
+    f = lambda a: jnp.asarray(a, jnp.float32)
+    jobs = JobSpec(
+        t_min=f(rng.uniform(5, 20, n_jobs)),
+        beta=f(rng.uniform(1.1, 3.0, n_jobs)),
+        D=f(rng.uniform(50, 200, n_jobs)),
+        N=f(rng.integers(10, 1000, n_jobs)),
+        tau_est=f(rng.uniform(2, 6, n_jobs)),
+        tau_kill=f(rng.uniform(7, 12, n_jobs)),
+        phi_est=f(rng.uniform(0.1, 0.6, n_jobs)),
+        C=f(np.ones(n_jobs)), theta=f(np.full(n_jobs, 1e-4)),
+        R_min=f(np.zeros(n_jobs)))
+
+    def run():
+        r, u, p, c = solve_batch_jit("sresume", jobs, 32)
+        jax.block_until_ready(r)
+
+    dt = _time(run)
+    return dt, n_jobs / dt
+
+
+def bench_sim_throughput(n_jobs=2700):
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        out = run_strategy(key, jobs, "sresume", p, theta=1e-4)
+        jax.block_until_ready(out.result.pocd)
+
+    dt = _time(run)
+    return dt, jobs.total_tasks / dt
+
+
+def bench_pocd_kernel(J=1024, N=32, R=6):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    u = jax.random.uniform(ks[0], (J, N, R), minval=1e-6, maxval=1.0)
+    t_min = jnp.full((J,), 10.0)
+    beta = jnp.full((J,), 2.0)
+    D = jnp.full((J,), 50.0)
+    r = jnp.full((J,), 2, jnp.int32)
+
+    def run():
+        met, cost = ops.pocd_mc(u, t_min, beta, D, r, mode="sresume")
+        jax.block_until_ready(met)
+
+    dt = _time(run)
+    return dt, J * N * R / dt          # attempt-samples per second
+
+
+def bench_flash_attention(B=1, H=4, S=1024, D=128):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+
+    def run():
+        out = ops.attention(q, k, v, causal=True)
+        jax.block_until_ready(out)
+
+    dt = _time(run, warmup=1, iters=2)
+    flops = 4 * B * H * S * S * D / 2
+    return dt, flops / dt

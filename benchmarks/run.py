@@ -1,0 +1,56 @@
+"""Benchmark harness — one entry per paper table/figure plus framework
+throughput. Prints ``name,us_per_call,derived`` CSV (derived = the headline
+metric for that artifact; see each docstring)."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    out = fn()
+    dt = time.perf_counter() - t0
+    if isinstance(out, tuple) and len(out) == 2 and isinstance(out[0], list):
+        rows, headline = out
+    else:
+        rows, headline = None, out
+    return {"name": name, "us_per_call": dt * 1e6, "derived": headline,
+            "rows": rows}
+
+
+def main() -> None:
+    from . import paper_figures as pf
+    from . import perf
+
+    results = []
+    # --- paper artifacts ---
+    results.append(_run("fig2_strategies_utility_gain", pf.fig2_strategies))
+    results.append(_run("table1_tau_est_best_utility", pf.table1_tau_est))
+    results.append(_run("table2_tau_kill_best_utility", pf.table2_tau_kill))
+    results.append(_run("fig3_theta_utility_vs_mantri", pf.fig3_theta))
+    results.append(_run("fig4_beta_mean_pocd", pf.fig4_beta))
+    results.append(_run("fig5_rhist_mode_shift", pf.fig5_r_histogram))
+
+    # --- framework perf (us_per_call = one solver/sim/kernel invocation) ---
+    for name, fn in [("optimizer_batch_solve", perf.bench_optimizer_throughput),
+                     ("trace_sim_full", perf.bench_sim_throughput),
+                     ("kernel_pocd_mc", perf.bench_pocd_kernel),
+                     ("kernel_flash_attention", perf.bench_flash_attention)]:
+        dt, rate = fn()
+        results.append({"name": name, "us_per_call": dt * 1e6,
+                        "derived": rate, "rows": None})
+
+    out_dir = Path("artifacts")
+    out_dir.mkdir(exist_ok=True)
+    (out_dir / "bench_results.json").write_text(
+        json.dumps(results, indent=1, default=str))
+
+    print("name,us_per_call,derived")
+    for r in results:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Deadline-SLA serving with Chronos hedging.
+
+Serves batched requests on a real (reduced-config) model engine while the
+HedgedScheduler plans speculative replica dispatch per request deadline.
+Compares SLA attainment (PoCD) and machine-time cost against the no-hedging
+baseline — the serving analogue of the paper's Fig. 2.
+
+Run:  PYTHONPATH=src python examples/serve_sla.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.inputs import make_batch
+from repro.serve import (Engine, HedgedScheduler, ReplicaPool, Request,
+                         baseline_no_hedge)
+
+# 1) a real engine decoding real tokens (reduced gemma2 for CPU speed)
+cfg = get_config("gemma2-2b").reduced()
+eng = Engine.build(cfg, max_seq=32)
+batch = make_batch(cfg, 2, 8, "prefill")
+tokens = eng.generate(batch, n_tokens=8)
+print(f"engine ok: decoded {tokens.shape[1]} tokens/seq "
+      f"on {cfg.name} (live KV-cache decode)\n")
+
+# 2) SLA study over a heavy-tailed replica pool
+pool = ReplicaPool(n_replicas=8, base_tok_s=200.0, beta=1.3,
+                   rng=np.random.default_rng(0))
+requests = [Request(deadline=d, rid=i, n_tokens=64)
+            for i, d in enumerate(np.random.default_rng(1).uniform(
+                0.4, 0.9, size=600))]
+
+sched = HedgedScheduler(pool, theta=1e-2)
+hedged = sched.run_workload(requests)
+base = baseline_no_hedge(
+    ReplicaPool(n_replicas=8, base_tok_s=200.0, beta=1.3,
+                rng=np.random.default_rng(0)), requests)
+
+print(f"{'policy':16s} {'SLA attainment':>15s} {'mean machine-time':>18s}")
+print(f"{'no hedging':16s} {base['pocd']:15.3f} "
+      f"{base['mean_machine_time']:18.3f}")
+print(f"{'chronos hedged':16s} {hedged['pocd']:15.3f} "
+      f"{hedged['mean_machine_time']:18.3f}")
+
+by_strategy = {}
+for o in hedged["outcomes"]:
+    by_strategy.setdefault((o.strategy, o.r), []).append(o)
+print("\nplanned policies:")
+for (s, r), outs in sorted(by_strategy.items()):
+    met = np.mean([o.met for o in outs])
+    print(f"  {s:9s} r={r}: {len(outs):4d} requests, PoCD={met:.3f}")

@@ -1,0 +1,3 @@
+"""repro: Chronos (speculative execution for deadline-critical jobs) as a
+first-class layer of a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing (atomic, sharded, async)."""
+from . import checkpoint
+from .checkpoint import save, restore, latest_step, AsyncCheckpointer

@@ -1,0 +1,61 @@
+"""Completion-time estimation and work-preserving handoff (paper Section VI).
+
+Eq. (30): startup-aware estimated completion time
+    t_ect = t_lau + (t_FP - t_lau) + (t_now - t_FP) / (CP - FP)
+where t_lau is launch time, t_FP the time of the first progress report, and
+FP/CP the first/current progress scores. The middle term is the measured
+startup (JVM in Hadoop; XLA compile + weight load in this framework) overhead;
+the last term extrapolates pure processing time to 100% progress.
+
+Hadoop's default estimator (the baseline we improve on) ignores startup:
+    t_ect_naive = t_lau + (t_now - t_lau) / CP
+
+Eq. (31): when re-dispatching a work-preserving attempt, the new attempt skips
+the bytes the original will process during the new attempt's startup window:
+    b_extra = b_est / (tau_est - t_FP) * (t_FP - t_lau)
+    b_new   = b_start + b_est + b_extra
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class ProgressReport(NamedTuple):
+    t_lau: jnp.ndarray   # launch time
+    t_fp: jnp.ndarray    # time of first progress report
+    fp: jnp.ndarray      # first reported progress in (0, 1]
+    t_now: jnp.ndarray   # current time
+    cp: jnp.ndarray      # current progress in (0, 1]
+
+
+def estimate_completion_chronos(rep: ProgressReport):
+    """Eq. (30) literally: t_lau + (t_FP - t_lau) + (t_now - t_FP)/(CP - FP).
+
+    The last term is the *total* processing-time estimate (time per unit
+    progress since first report, scaled to progress 1).
+    """
+    dp = jnp.maximum(rep.cp - rep.fp, 1e-9)
+    return rep.t_lau + (rep.t_fp - rep.t_lau) + (rep.t_now - rep.t_fp) / dp
+
+
+def estimate_completion_naive(rep: ProgressReport):
+    """Hadoop default: elapsed / progress — biased when startup time >> 0."""
+    return rep.t_lau + (rep.t_now - rep.t_lau) / jnp.maximum(rep.cp, 1e-9)
+
+
+def is_straggler(rep: ProgressReport, deadline, naive: bool = False):
+    est = estimate_completion_naive(rep) if naive else estimate_completion_chronos(rep)
+    return est > deadline
+
+
+def handoff_offset(b_start, b_est, tau_est, t_fp, t_lau):
+    """Eq. (31): byte offset for resumed attempts, anticipating their startup.
+
+    b_extra = rate * startup, with rate = b_est / (tau_est - t_FP) and
+    startup = (t_FP - t_lau) measured on the original attempt.
+    """
+    rate = b_est / jnp.maximum(tau_est - t_fp, 1e-9)
+    b_extra = rate * (t_fp - t_lau)
+    return b_start + b_est + b_extra

@@ -1,0 +1,109 @@
+"""Pareto distribution utilities (the paper's task-attempt time model, Eq. 2).
+
+T ~ Pareto(t_min, beta):  f(t) = beta * t_min^beta / t^(beta+1),  t >= t_min
+                          S(t) = P(T > t) = (t_min / t)^beta
+All functions are pure JAX, jit/vmap/grad friendly, and broadcast over leading
+dimensions so the governor can fit/evaluate many job classes at once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParetoParams(NamedTuple):
+    t_min: jax.Array  # scale (minimum execution time), > 0
+    beta: jax.Array   # tail index, > 1 for finite mean
+
+
+def pdf(t, t_min, beta):
+    t, t_min, beta = jnp.asarray(t), jnp.asarray(t_min), jnp.asarray(beta)
+    val = beta * jnp.power(t_min, beta) / jnp.power(t, beta + 1.0)
+    return jnp.where(t >= t_min, val, 0.0)
+
+
+def cdf(t, t_min, beta):
+    t = jnp.asarray(t)
+    return jnp.where(t >= t_min, 1.0 - jnp.power(t_min / t, beta), 0.0)
+
+
+def sf(t, t_min, beta):
+    """Survival function P(T > t)."""
+    t = jnp.asarray(t)
+    return jnp.where(t >= t_min, jnp.power(t_min / t, beta), 1.0)
+
+
+def log_sf(t, t_min, beta):
+    t = jnp.asarray(t)
+    return jnp.where(t >= t_min, beta * (jnp.log(t_min) - jnp.log(t)), 0.0)
+
+
+def mean(t_min, beta):
+    """E[T] = t_min * beta / (beta - 1) for beta > 1."""
+    return t_min * beta / (beta - 1.0)
+
+
+def quantile(q, t_min, beta):
+    """Inverse CDF."""
+    return t_min * jnp.power(1.0 - q, -1.0 / beta)
+
+
+def sample(key, t_min, beta, shape=()):
+    """Inverse-transform sampling. Uses uniform in (0,1]."""
+    u = jax.random.uniform(key, shape=shape, minval=jnp.finfo(jnp.float32).tiny,
+                           maxval=1.0)
+    return t_min * jnp.power(u, -1.0 / beta)
+
+
+def min_of_n_mean(t_min, beta, n):
+    """Lemma 1: E[min of n iid Pareto] = t_min * n*beta / (n*beta - 1).
+
+    The min of n iid Pareto(t_min, beta) is Pareto(t_min, n*beta).
+    Requires n*beta > 1.
+    """
+    nb = n * beta
+    return t_min * nb / (nb - 1.0)
+
+
+def truncated_mean_below(t_min, beta, D):
+    """E[T | T <= D] for Pareto (paper Eq. 40/53).
+
+    = t_min*D*beta*(t_min^(beta-1) - D^(beta-1)) / ((1-beta)*(D^beta - t_min^beta))
+
+    Stable rearrangement (avoids overflow for large beta*log scales):
+      E = beta/(beta-1) * (t_min - D*q) / (1 - q),  q = (t_min/D)^beta
+    which follows by dividing numerator and denominator by D^(beta-1) resp. D^beta.
+    Handles beta == 1 by a series-free log form.
+    """
+    q = jnp.power(t_min / D, beta)
+    general = beta / (beta - 1.0) * (t_min - D * q) / (1.0 - q)
+    # beta == 1: E[T | T<=D] = t_min * ln(D/t_min) / (1 - t_min/D)
+    at_one = t_min * jnp.log(D / t_min) / (1.0 - t_min / D)
+    return jnp.where(jnp.abs(beta - 1.0) < 1e-6, at_one, general)
+
+
+def truncated_mean_above(t_min, beta, D):
+    """E[T | T > D] = D * beta / (beta - 1) (Pareto is self-similar above D)."""
+    return D * beta / (beta - 1.0)
+
+
+def fit_mle(samples, mask=None):
+    """Maximum-likelihood fit of (t_min, beta) from observed durations.
+
+    t_min_hat = min(samples); beta_hat = n / sum(log(samples / t_min_hat)).
+    `mask` optionally marks valid entries (for ragged telemetry buffers).
+    Returns ParetoParams. Pure JAX (jit-able); beta clipped to (1.01, 20) for
+    downstream finite-mean formulas.
+    """
+    x = jnp.asarray(samples, dtype=jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(x, dtype=bool)
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    t_min_hat = jnp.min(jnp.where(mask, x, big))
+    n = jnp.sum(mask)
+    logs = jnp.where(mask, jnp.log(jnp.maximum(x, 1e-30) / t_min_hat), 0.0)
+    denom = jnp.maximum(jnp.sum(logs), 1e-9)
+    beta_hat = jnp.clip(n / denom, 1.01, 20.0)
+    return ParetoParams(t_min=t_min_hat, beta=beta_hat)

@@ -1,0 +1,114 @@
+"""PoCD (Probability of Completion before Deadline) — paper Theorems 1, 3, 5.
+
+All computations are done in log space for numerical stability with large task
+counts N (trace jobs have up to ~1e4 tasks) and are smooth in `r` so the same
+code serves both the integer evaluation (Algorithm 1, phase 2) and the
+continuous relaxation used by the gradient phase.
+
+Conventions (single job; vmap for batches):
+  t_min, beta : Pareto parameters of a single attempt's execution time
+  D           : job deadline
+  N           : number of tasks in the job
+  r           : number of extra (speculative/clone) attempts, r >= 0
+  tau_est     : straggler-detection time (reactive strategies), tau_est < D
+  phi_est     : average straggler progress at tau_est (S-Resume), in [0, 1)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Per-task log failure probabilities:  log P(task misses D)
+# ---------------------------------------------------------------------------
+
+
+def _log_ratio(t_min, D):
+    """log(t_min / D), guarded (requires D > t_min for a meaningful deadline)."""
+    return jnp.log(t_min) - jnp.log(D)
+
+
+def _log_sf_ratio(log_ratio):
+    """Clamp a log survival term at 0: P(T > t) = min(1, (t_min/t)^beta).
+
+    The paper's Thms 3/5 implicitly assume D - tau_est >= t_min ("otherwise
+    there is no reason for launching extra attempts", Appendix); outside that
+    regime the raw ratio exceeds 1. Clamping keeps the formulas valid
+    probabilities everywhere — attempts that cannot possibly finish in the
+    remaining window contribute failure probability exactly 1.
+    """
+    return jnp.minimum(log_ratio, 0.0)
+
+
+def log_task_fail_clone(r, t_min, beta, D):
+    """Thm 1:  P_fail = (t_min/D)^(beta*(r+1))."""
+    return beta * (r + 1.0) * _log_sf_ratio(_log_ratio(t_min, D))
+
+
+def log_task_fail_srestart(r, t_min, beta, D, tau_est):
+    """Thm 3:  P_fail = (t_min/D)^beta * (t_min/(D-tau_est))^(beta*r).
+
+    The original attempt must exceed D and each of the r restarted attempts
+    (launched at tau_est, starting from scratch) must exceed D - tau_est.
+    """
+    return beta * _log_sf_ratio(_log_ratio(t_min, D)) + \
+        beta * r * _log_sf_ratio(_log_ratio(t_min, D - tau_est))
+
+
+def log_task_fail_sresume(r, t_min, beta, D, tau_est, phi_est):
+    """Thm 5:  P_fail = (t_min/D)^beta * ((1-phi)*t_min/(D-tau_est))^(beta*(r+1)).
+
+    The straggler is killed; r+1 fresh attempts process the remaining (1-phi)
+    fraction, each with time max(t_min, (1-phi)*T), T ~ Pareto. With the
+    startup floor, the per-attempt survival at D - tau_est is
+    min(1, ((1-phi) t_min / (D-tau))^beta) when D - tau >= t_min and exactly 1
+    when D - tau < t_min (the floor alone overruns the window).
+    """
+    window = D - tau_est
+    resid = jnp.log1p(-phi_est) + _log_ratio(t_min, window)
+    resid = jnp.where(window >= t_min, jnp.minimum(resid, 0.0), 0.0)
+    return beta * _log_sf_ratio(_log_ratio(t_min, D)) + beta * (r + 1.0) * resid
+
+
+# ---------------------------------------------------------------------------
+# Job-level PoCD:  R = (1 - P_fail)^N
+# ---------------------------------------------------------------------------
+
+
+def _job_pocd_from_log_fail(log_p_fail, N):
+    # R = exp(N * log1p(-exp(log_p_fail))), computed stably.
+    p = jnp.exp(jnp.minimum(log_p_fail, 0.0))
+    # clip p away from 1 so log1p stays finite; p == 1 -> R == 0 anyway.
+    return jnp.exp(N * jnp.log1p(-jnp.minimum(p, 1.0 - 1e-12)))
+
+
+def pocd_clone(r, t_min, beta, D, N):
+    """R_Clone (Theorem 1)."""
+    return _job_pocd_from_log_fail(log_task_fail_clone(r, t_min, beta, D), N)
+
+
+def pocd_srestart(r, t_min, beta, D, N, tau_est):
+    """R_S-Restart (Theorem 3). At r == 0 this degenerates to no speculation."""
+    r = jnp.asarray(r, dtype=jnp.float32)
+    lf = log_task_fail_srestart(r, t_min, beta, D, tau_est)
+    return _job_pocd_from_log_fail(lf, N)
+
+
+def pocd_sresume(r, t_min, beta, D, N, tau_est, phi_est):
+    """R_S-Resume (Theorem 5).
+
+    Note: unlike S-Restart, r extra attempts means r+1 fresh resumed attempts
+    (the original straggler is killed), so even r == 0 re-dispatches once.
+    """
+    lf = log_task_fail_sresume(r, t_min, beta, D, tau_est, phi_est)
+    return _job_pocd_from_log_fail(lf, N)
+
+
+def pocd(strategy: str, r, t_min, beta, D, N, tau_est=None, phi_est=None):
+    """Dispatch by strategy name: 'clone' | 'srestart' | 'sresume'."""
+    if strategy == "clone":
+        return pocd_clone(r, t_min, beta, D, N)
+    if strategy == "srestart":
+        return pocd_srestart(r, t_min, beta, D, N, tau_est)
+    if strategy == "sresume":
+        return pocd_sresume(r, t_min, beta, D, N, tau_est, phi_est)
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,51 @@
+"""Theorem 7 strategy-dominance results and supporting lemmas.
+
+Used by the governor to pre-prune strategies and by the test suite to verify
+the closed forms respect the proven orderings.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .utility import JobSpec
+from .pocd import pocd_clone, pocd_srestart, pocd_sresume
+
+
+def clone_beats_srestart(job: JobSpec, r):
+    """Thm 7(1): R_Clone > R_S-Restart for any r >= 1 (strict when r > 0)."""
+    rc = pocd_clone(r, job.t_min, job.beta, job.D, job.N)
+    rr = pocd_srestart(r, job.t_min, job.beta, job.D, job.N, job.tau_est)
+    return rc >= rr
+
+
+def sresume_beats_srestart(job: JobSpec, r):
+    """Thm 7(2): R_S-Resume > R_S-Restart when D - tau >= t_min (1 - phi)."""
+    rs = pocd_sresume(r, job.t_min, job.beta, job.D, job.N,
+                               job.tau_est, job.phi_est)
+    rr = pocd_srestart(r, job.t_min, job.beta, job.D, job.N, job.tau_est)
+    return rs >= rr
+
+
+def clone_vs_sresume_threshold(job: JobSpec):
+    """Thm 7(3): Clone beats S-Resume iff r exceeds this threshold.
+
+    r* = log_{ (D-tau) / ((1-phi) D) } [ (1-phi)^beta t_min^beta / (D-tau) ] ... the
+    paper's Eq. (60); we return the equivalent exact crossing point of the two
+    log-failure exponents, which the tests verify against direct comparison:
+
+      log q_clone(r) = beta (r+1) ln(t_min/D)
+      log q_resume(r) = beta ln(t_min/D) + beta (r+1) ln((1-phi) t_min/(D-tau))
+      Clone better  <=>  q_clone < q_resume
+        <=>  (r+1) [ln(t_min/D) - ln((1-phi) t_min / (D-tau))] < ln(t_min/D)
+    """
+    a = jnp.log(job.t_min / job.D)
+    b = jnp.log1p(-job.phi_est) + jnp.log(job.t_min / (job.D - job.tau_est))
+    # (r+1) (a - b) < a; note sign of (a - b) decides the inequality direction.
+    return a / (a - b) - 1.0
+
+
+def clone_beats_sresume(job: JobSpec, r):
+    """Clone better <=> q_clone < q_resume <=> beta(r+1)a < beta a + beta(r+1)b."""
+    a = jnp.log(job.t_min / job.D)
+    b = jnp.log1p(-job.phi_est) + jnp.log(job.t_min / (job.D - job.tau_est))
+    return (r + 1.0) * a < a + (r + 1.0) * b

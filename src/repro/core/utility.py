@@ -1,0 +1,106 @@
+"""Net utility U(r) and concavity thresholds — paper Section V, Theorem 8.
+
+  U(r) = f(R(r) - R_min) - theta * C * E[T](r),   f = lg (log10, proportional
+  fairness per the paper), with U = -inf whenever R(r) <= R_min.
+
+Gamma thresholds (Thm 8) mark where R(r) becomes concave in r; Algorithm 1
+exploits concavity above Gamma and brute-forces the (few) integers below it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .pocd import pocd as _pocd_dispatch
+from .cost import cost as _cost_dispatch
+
+NEG_INF = -jnp.inf
+
+
+class JobSpec(NamedTuple):
+    """Everything the optimizer needs to know about one job (or job class)."""
+    t_min: jnp.ndarray
+    beta: jnp.ndarray
+    D: jnp.ndarray
+    N: jnp.ndarray
+    tau_est: jnp.ndarray
+    tau_kill: jnp.ndarray
+    phi_est: jnp.ndarray          # average straggler progress at tau_est
+    C: jnp.ndarray                # VM price per unit machine time
+    theta: jnp.ndarray            # PoCD / cost tradeoff factor
+    R_min: jnp.ndarray            # SLA floor on PoCD
+
+    @classmethod
+    def make(cls, t_min, beta, D, N, tau_est=None, tau_kill=None, phi_est=0.5,
+             C=1.0, theta=1e-4, R_min=0.0):
+        t_min = jnp.float32(t_min)
+        if tau_est is None:
+            tau_est = 0.3 * t_min          # paper's best setting (Table I)
+        if tau_kill is None:
+            tau_kill = tau_est + 0.5 * t_min
+        f = jnp.float32
+        return cls(f(t_min), f(beta), f(D), f(N), f(tau_est), f(tau_kill),
+                   f(phi_est), f(C), f(theta), f(R_min))
+
+
+def pocd_of(strategy: str, r, job: JobSpec):
+    return _pocd_dispatch(strategy, r, job.t_min, job.beta, job.D, job.N,
+                          tau_est=job.tau_est, phi_est=job.phi_est)
+
+
+def cost_of(strategy: str, r, job: JobSpec):
+    return _cost_dispatch(strategy, r, job.t_min, job.beta, job.D, job.N,
+                          tau_est=job.tau_est, tau_kill=job.tau_kill,
+                          phi_est=job.phi_est)
+
+
+def utility(strategy: str, r, job: JobSpec):
+    """U(r) = lg(R(r) - R_min) - theta * C * E[T]; -inf below the SLA floor."""
+    R = pocd_of(strategy, r, job)
+    E = cost_of(strategy, r, job)
+    gap = R - job.R_min
+    log_term = jnp.where(gap > 0.0, jnp.log10(jnp.maximum(gap, 1e-30)), NEG_INF)
+    return log_term - job.theta * job.C * E
+
+
+# ---------------------------------------------------------------------------
+# Theorem 8 concavity thresholds
+# ---------------------------------------------------------------------------
+
+
+def gamma_clone(job: JobSpec):
+    """Gamma_Clone = -1/beta * log_{t_min/D} N - 1  (R concave for r > Gamma).
+
+    Equivalent to: R_Clone(r) is concave iff (t_min/D)^(beta(r+1)) <= 1/N.
+    """
+    log_ratio = jnp.log(job.t_min / job.D)  # < 0
+    return -jnp.log(job.N) / (job.beta * log_ratio) - 1.0
+
+
+def gamma_srestart(job: JobSpec):
+    """Gamma_S-Restart = 1/beta * log_{t_min/(D-tau)} (D^beta / (N t_min^beta)).
+
+    Concavity condition: task failure prob q(r) <= 1/N, i.e.
+    (t_min/D)^beta * (t_min/(D-tau))^(beta r) <= 1/N.
+    """
+    lr = jnp.log(job.t_min / (job.D - job.tau_est))  # < 0
+    target = job.beta * jnp.log(job.D / job.t_min) - jnp.log(job.N)
+    return target / (job.beta * lr)
+
+
+def gamma_sresume(job: JobSpec):
+    """Gamma_S-Resume: same condition with the resumed-attempt failure ratio."""
+    lr = jnp.log1p(-job.phi_est) + jnp.log(job.t_min / (job.D - job.tau_est))
+    target = job.beta * jnp.log(job.D / job.t_min) - jnp.log(job.N)
+    return target / (job.beta * lr) - 1.0
+
+
+def gamma(strategy: str, job: JobSpec):
+    if strategy == "clone":
+        return gamma_clone(job)
+    if strategy == "srestart":
+        return gamma_srestart(job)
+    if strategy == "sresume":
+        return gamma_sresume(job)
+    raise ValueError(f"unknown strategy {strategy!r}")

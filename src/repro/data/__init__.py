@@ -1,0 +1,2 @@
+"""Deterministic, seekable, per-host sharded input pipeline."""
+from .pipeline import DataPipeline, PipelineConfig, make_shard, assemble

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+pocd_mc — the paper's Monte-Carlo evaluation hot spot as an on-chip MapReduce;
+flash_attention — tiled online-softmax attention for the serving/train path.
+Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py.
+"""
+from . import ops, ref
+from .ops import pocd_mc, attention

@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on TPU pass interpret=False
+(the default flips automatically on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .pocd_mc import pocd_mc_pallas, JOB_TILE
+from .flash_attention import flash_attention
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tau_est_frac",
+                                             "tau_kill_gap_frac", "phi"))
+def pocd_mc(u, t_min, beta, D, r, mode="clone", tau_est_frac=0.3,
+            tau_kill_gap_frac=0.5, phi=0.25):
+    """Monte-Carlo PoCD + cost for a batch of uniform-N jobs.
+
+    Pads the job dim to the kernel tile. Returns (met (J,), cost (J,)).
+    """
+    J = u.shape[0]
+    pad = (-J) % JOB_TILE
+    if pad:
+        u = jnp.pad(u, ((0, pad), (0, 0), (0, 0)), constant_values=0.5)
+        t_min = jnp.pad(t_min, (0, pad), constant_values=1.0)
+        beta = jnp.pad(beta, (0, pad), constant_values=2.0)
+        D = jnp.pad(D, (0, pad), constant_values=1e9)
+        r = jnp.pad(r, (0, pad))
+    met, cost = pocd_mc_pallas(u, t_min, beta, D, r, mode=mode,
+                               tau_est_frac=tau_est_frac,
+                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
+                               interpret=_default_interpret())
+    return met[:J], cost[:J]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap", "block_q",
+                                             "block_k"))
+def attention(q, k, v, causal=True, softcap=None, block_q=128, block_k=128):
+    """Flash attention forward. q: (B,H,S,D); k/v: (B,K,S,D)."""
+    return flash_attention(q, k, v, causal=causal, softcap=softcap,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_default_interpret())

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: Monte-Carlo PoCD/cost estimation — the paper's
+evaluation hot spot as a literal on-chip MapReduce.
+
+Map: transform per-attempt uniforms into Pareto execution times, per-task
+minimum over active attempts (the speculative race). Reduce: per-job
+all-tasks-before-deadline indicator + total machine time. One grid step
+processes a tile of jobs; the (jobs_tile, n_tasks, max_attempts) working set
+lives in VMEM (128 x 64 x 8 f32 = 256 KiB).
+
+Used by the governor's empirical PoCD cross-check and by benchmarks; the
+ragged-trace path uses the segment-reduction JAX implementation (sim/), and
+`ref.py` holds the pure-jnp oracle this kernel is tested against.
+
+Strategy semantics match sim/strategies.py exactly:
+  clone    — r+1 attempts from t=0; killed clones bill tau_kill each.
+  srestart — original + r restarts at tau_est for stragglers (T1 > D).
+  sresume  — original killed at tau_est; r+1 resumed attempts process the
+             remaining (1-phi) work with a t_min startup floor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+JOB_TILE = 128
+
+
+def _kernel(u_ref, tmin_ref, beta_ref, D_ref, r_ref, met_ref, cost_ref, *,
+            mode: str, tau_est_frac: float, tau_kill_gap_frac: float,
+            phi: float):
+    u = u_ref[...]                    # (Jt, N, R)
+    t_min = tmin_ref[...][:, None, None]
+    beta = beta_ref[...][:, None, None]
+    D = D_ref[...][:, None]           # (Jt, 1)
+    r = r_ref[...][:, None]           # (Jt, 1) int32
+    Jt, N, R = u.shape
+
+    tau_est = tau_est_frac * t_min[:, :, 0]
+    tau_kill = tau_est + tau_kill_gap_frac * t_min[:, :, 0]
+
+    att = t_min * jnp.exp(-jnp.log(u) / beta)     # Pareto via u^(-1/beta)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R), 2)
+
+    if mode == "clone":
+        active = slot <= r[:, :, None]
+        best = jnp.min(jnp.where(active, att, jnp.inf), axis=2)
+        completion = best
+        machine = r.astype(att.dtype) * tau_kill + best
+    elif mode == "srestart":
+        T1 = att[:, :, 0]
+        strag = T1 > D
+        extra_slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R - 1), 2)
+        active = (extra_slot < r[:, :, None]) & strag[:, :, None]
+        extras = jnp.min(jnp.where(active, att[:, :, 1:], jnp.inf), axis=2)
+        w_all = jnp.minimum(T1 - tau_est, extras)
+        use = strag & (r > 0)
+        completion = jnp.where(use, tau_est + w_all, T1)
+        machine = jnp.where(
+            use, tau_est + r.astype(att.dtype) * (tau_kill - tau_est) + w_all,
+            T1)
+    else:  # sresume
+        T1 = att[:, :, 0]
+        strag = T1 > D
+        resumed = jnp.maximum(t_min, (1.0 - phi) * att[:, :, 1:])
+        extra_slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R - 1), 2)
+        active = (extra_slot <= r[:, :, None]) & strag[:, :, None]
+        w_new = jnp.min(jnp.where(active, resumed, jnp.inf), axis=2)
+        completion = jnp.where(strag, tau_est + w_new, T1)
+        machine = jnp.where(
+            strag, tau_est + r.astype(att.dtype) * (tau_kill - tau_est) + w_new,
+            T1)
+
+    met_ref[...] = jnp.all(completion <= D, axis=1).astype(jnp.float32)
+    cost_ref[...] = jnp.sum(machine, axis=1)
+
+
+def pocd_mc_pallas(u, t_min, beta, D, r, *, mode="clone", tau_est_frac=0.3,
+                   tau_kill_gap_frac=0.5, phi=0.25, interpret=True):
+    """u: (J, N, R) uniforms; per-job t_min/beta/D (J,), r (J,) int32.
+
+    Returns (met (J,) f32, cost (J,) f32). J must be a multiple of JOB_TILE.
+    """
+    J, N, R = u.shape
+    assert J % JOB_TILE == 0, f"J={J} must divide the {JOB_TILE} job tile"
+    grid = (J // JOB_TILE,)
+    kernel = functools.partial(_kernel, mode=mode, tau_est_frac=tau_est_frac,
+                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi)
+    met, cost = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((JOB_TILE, N, R), lambda i: (i, 0, 0)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((J,), jnp.float32),
+            jax.ShapeDtypeStruct((J,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, t_min, beta, D, r)
+    return met, cost

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pocd_mc_ref(u, t_min, beta, D, r, *, mode="clone", tau_est_frac=0.3,
+                tau_kill_gap_frac=0.5, phi=0.25):
+    """Oracle for kernels.pocd_mc — same semantics, plain jnp."""
+    J, N, R = u.shape
+    tm = t_min[:, None, None]
+    be = beta[:, None, None]
+    Dj = D[:, None]
+    rj = r[:, None]
+    tau_est = tau_est_frac * t_min[:, None]
+    tau_kill = tau_est + tau_kill_gap_frac * t_min[:, None]
+    att = tm * jnp.power(u, -1.0 / be)
+    slot = jnp.arange(R)[None, None, :]
+
+    if mode == "clone":
+        active = slot <= rj[:, :, None]
+        best = jnp.min(jnp.where(active, att, jnp.inf), axis=2)
+        completion = best
+        machine = rj * tau_kill + best
+    elif mode == "srestart":
+        T1 = att[:, :, 0]
+        strag = T1 > Dj
+        eslot = jnp.arange(R - 1)[None, None, :]
+        active = (eslot < rj[:, :, None]) & strag[:, :, None]
+        extras = jnp.min(jnp.where(active, att[:, :, 1:], jnp.inf), axis=2)
+        w_all = jnp.minimum(T1 - tau_est, extras)
+        use = strag & (rj > 0)
+        completion = jnp.where(use, tau_est + w_all, T1)
+        machine = jnp.where(use, tau_est + rj * (tau_kill - tau_est) + w_all, T1)
+    elif mode == "sresume":
+        T1 = att[:, :, 0]
+        strag = T1 > Dj
+        resumed = jnp.maximum(tm, (1.0 - phi) * att[:, :, 1:])
+        eslot = jnp.arange(R - 1)[None, None, :]
+        active = (eslot <= rj[:, :, None]) & strag[:, :, None]
+        w_new = jnp.min(jnp.where(active, resumed, jnp.inf), axis=2)
+        completion = jnp.where(strag, tau_est + w_new, T1)
+        machine = jnp.where(strag, tau_est + rj * (tau_kill - tau_est) + w_new,
+                            T1)
+    else:
+        raise ValueError(mode)
+    met = jnp.all(completion <= Dj, axis=1).astype(jnp.float32)
+    cost = jnp.sum(machine, axis=1)
+    return met, cost
+
+
+def attention_ref(q, k, v, *, causal=True, softcap=None):
+    """Oracle for kernels.flash_attention. q: (B,H,S,D); k/v: (B,K,S,D)."""
+    B, H, Sq, D = q.shape
+    K = k.shape[1]
+    g = H // K
+    qg = q.reshape(B, K, g, Sq, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,330 @@
+"""Roofline-grade analysis of compiled (SPMD-partitioned) HLO text.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, which
+under-counts scanned layers and gradient-accumulation microbatches by the
+trip count. This analyzer re-derives the three roofline inputs from the HLO
+text itself:
+
+  * dot_flops   — 2 * |result| * |contracted dims|, per dot, multiplied by
+                  the product of enclosing loop trip counts;
+  * hbm_bytes   — estimated HBM traffic: for every top-level op in the entry
+                  and while-body computations (post-fusion, so each op's
+                  result/operands are real buffer reads/writes), result bytes
+                  + operand bytes, views (gte/tuple/bitcast/parameter/
+                  constant) excluded, fusion internals excluded (they stay in
+                  registers/VMEM);
+  * wire_bytes  — per-chip collective traffic with ring-model factors from
+                  replica group sizes, times trip counts.
+
+Trip counts come from the loop-condition computation's s32 constant (XLA's
+canonical counted-loop form produced by lax.scan). Shapes are per-device
+because SPMD partitioning already happened.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)(\(|\.|,| )")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)(%[\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+_VIEW_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "copy",
+             "copy-start", "copy-done"}
+# CPU XLA wraps single layout/convert ops in named kLoop fusions; on TPU these
+# fuse into their consumers and touch no HBM of their own.
+_FUSED_AWAY_PREFIXES = ("%wrapped_convert", "%wrapped_transpose",
+                        "%wrapped_broadcast", "%wrapped_copy",
+                        "%wrapped_reshape", "%wrapped_bitcast",
+                        "%bitcast_fusion", "%convert_bitcast_fusion")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(text: str):
+    total_b = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b
+
+
+def _shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class OpInfo:
+    name: str
+    shape_txt: str
+    kind: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.comps: dict[str, Computation] = {}
+        self.sym: dict[str, str] = {}       # op name -> result shape text
+        self._parse(text)
+        self.flops = 0.0
+        self.hbm_bytes = 0.0
+        self.wire_bytes = 0.0
+        self.collectives = defaultdict(
+            lambda: {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+        self.trip_counts: dict[str, int] = {}
+        self._visited_stack = []
+        entry = self._entry_name
+        if entry:
+            self._walk(entry, 1.0, top=True)
+
+    # ---- parsing ----
+    def _parse(self, text: str):
+        cur = None
+        self._entry_name = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            mc = _COMP_RE.match(line)
+            if mc:
+                cur = Computation(mc.group(1))
+                self.comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    self._entry_name = cur.name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            name, shape_txt, kind = md.group(1), md.group(2), md.group(3)
+            self.sym[name] = shape_txt
+            cur.ops.append(OpInfo(name, shape_txt, kind, line))
+
+    def _root_is_dus(self, comp_name: str, result_shape: str = "") -> bool:
+        """In-place cache/carry update fusion: the result buffer aliases the
+        base operand. Detected by a dynamic-update-slice at (or feeding) the
+        fusion root with the fusion's full result shape."""
+        comp = self.comps.get(comp_name)
+        if not comp:
+            return False
+
+        def elems(txt):
+            _, dims = _shape_dims(txt)
+            n = 1
+            for d in dims:
+                n *= d
+            return n
+
+        res_elems = elems(result_shape) if result_shape else None
+        for op in comp.ops:
+            if op.kind == "dynamic-update-slice":
+                # element-count comparison: fusions may convert dtypes
+                if res_elems is None or elems(op.shape_txt) == res_elems:
+                    return True
+        return False
+
+    # ---- trip counts ----
+    def _trip_count(self, cond_name: str) -> int:
+        if cond_name in self.trip_counts:
+            return self.trip_counts[cond_name]
+        n = 1
+        comp = self.comps.get(cond_name)
+        if comp:
+            consts = []
+            for op in comp.ops:
+                m = re.search(r"constant\((\d+)\)", op.line)
+                if m and op.shape_txt.startswith("s32"):
+                    consts.append(int(m.group(1)))
+            # also look inside wrapped-compare fusions called from the cond
+            for op in comp.ops:
+                cm = _CALLS_RE.search(op.line)
+                if cm and cm.group(1) in self.comps:
+                    for op2 in self.comps[cm.group(1)].ops:
+                        m = re.search(r"constant\((\d+)\)", op2.line)
+                        if m and op2.shape_txt.startswith("s32"):
+                            consts.append(int(m.group(1)))
+            if consts:
+                n = max(consts)
+        self.trip_counts[cond_name] = max(n, 1)
+        return self.trip_counts[cond_name]
+
+    # ---- op costing ----
+    def _operand_bytes(self, line: str) -> float:
+        m = _OPERANDS_RE.search(line.split("=", 1)[1])
+        if not m:
+            return 0.0
+        total = 0.0
+        for token in m.group(1).split(","):
+            token = token.strip()
+            if token.startswith("%") and token in self.sym:
+                total += _shape_elems_bytes(self.sym[token])
+        return total
+
+    def _dot_flops(self, op: OpInfo) -> float:
+        out_b = _shape_elems_bytes(op.shape_txt)
+        _, out_dims = _shape_dims(op.shape_txt)
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        cm = _CONTRACT_RE.search(op.line)
+        k = 1
+        if cm:
+            lhs_name = None
+            m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
+            if m:
+                toks = [t.strip() for t in m.group(1).split(",")]
+                if toks and toks[0].startswith("%"):
+                    lhs_name = toks[0]
+            if lhs_name and lhs_name in self.sym:
+                _, lhs_dims = _shape_dims(self.sym[lhs_name])
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    def _collective(self, op: OpInfo, mult: float):
+        kind = op.kind.replace("-start", "")
+        rb = _shape_elems_bytes(op.shape_txt)
+        gm = _GROUPS_RE.search(op.line)
+        if gm:
+            s = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(op.line)
+            s = len(gl.group(1).split(",")) if gl else 2
+        s = max(s, 1)
+        frac = (s - 1) / s
+        ob = self._operand_bytes(op.line)
+        if kind == "all-gather":
+            wire = rb * frac
+        elif kind == "reduce-scatter":
+            wire = ob * frac
+        elif kind == "all-reduce":
+            wire = 2 * ob * frac
+        elif kind == "all-to-all":
+            wire = ob * frac
+        else:  # collective-permute
+            wire = rb
+        d = self.collectives[kind]
+        d["count"] += mult
+        d["result_bytes"] += mult * rb
+        d["wire_bytes"] += mult * wire
+        self.wire_bytes += mult * wire
+        return rb + ob
+
+    # ---- walk ----
+    def _walk(self, comp_name: str, mult: float, top: bool):
+        """top=True: count HBM bytes for ops here (entry / while bodies).
+        fusion subcomputations only contribute dot flops."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            kind = op.kind
+            if kind.endswith("-done"):
+                continue
+            if kind == "while":
+                wm = _WHILE_RE.search(op.line)
+                if wm:
+                    trips = self._trip_count(wm.group(1))
+                    self._walk(wm.group(2), mult * trips, top=True)
+                continue
+            if kind == "dot":
+                self.flops += mult * self._dot_flops(op)
+                if top:
+                    self.hbm_bytes += mult * (
+                        _shape_elems_bytes(op.shape_txt)
+                        + self._operand_bytes(op.line))
+                continue
+            base_kind = kind.replace("-start", "")
+            if base_kind in _COLLECTIVES:
+                b = self._collective(op, mult)
+                if top:
+                    self.hbm_bytes += mult * b
+                continue
+            if kind in ("dynamic-update-slice", "scatter"):
+                # XLA aliases the base buffer in place: traffic is the update
+                # (+ indices), not the full result/base.
+                if top:
+                    ob = self._operand_bytes(op.line)
+                    base = 0.0
+                    m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
+                    if m:
+                        toks = [t.strip() for t in m.group(1).split(",")]
+                        if toks and toks[0].startswith("%") and \
+                                toks[0] in self.sym:
+                            base = _shape_elems_bytes(self.sym[toks[0]])
+                    self.hbm_bytes += mult * max(ob - base, 0.0) * 2
+                continue
+            if kind in ("fusion", "call", "conditional", "map",
+                        "custom-call", "reduce", "sort", "scatter",
+                        "select-and-scatter"):
+                if any(op.name.startswith(p) for p in _FUSED_AWAY_PREFIXES):
+                    # layout-only wrapper: fuses into its consumer on TPU
+                    cm = _CALLS_RE.search(op.line)
+                    if cm:
+                        self._walk(cm.group(1), mult, top=False)
+                    continue
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    self._walk(cm.group(1), mult, top=False)
+                if top:
+                    if cm and self._root_is_dus(cm.group(1), op.shape_txt):
+                        # in-place cache/carry update inside a fusion: count
+                        # the non-base operands (update + indices) twice
+                        ob = self._operand_bytes(op.line)
+                        rb = _shape_elems_bytes(op.shape_txt)
+                        self.hbm_bytes += mult * max(ob - rb, 0.0) * 2
+                    else:
+                        self.hbm_bytes += mult * (
+                            _shape_elems_bytes(op.shape_txt)
+                            + self._operand_bytes(op.line))
+                continue
+            if kind in _VIEW_OPS:
+                continue
+            if top:
+                self.hbm_bytes += mult * (_shape_elems_bytes(op.shape_txt)
+                                          + self._operand_bytes(op.line))
+
+    # ---- results ----
+    def summary(self) -> dict:
+        return {
+            "dot_flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "collectives": {k: dict(v) for k, v in self.collectives.items()},
+        }
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloAnalysis(hlo_text).summary()

@@ -1,0 +1,119 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds per step:
+
+  compute    = FLOPs_per_chip / 197e12        (TPU v5e bf16 peak)
+  memory     = HBM_bytes_per_chip / 819e9     (HBM bandwidth)
+  collective = wire_bytes_per_chip / 50e9     (per-link ICI; equals the
+               brief's total_bytes / (chips * link_bw) since our analyzer
+               reports per-chip wire traffic)
+
+The bottleneck is the max term. `ideal` = MODEL_FLOPS / (chips * peak): the
+time a perfect implementation would take; roofline_fraction = ideal / max
+term — the score we iterate on in §Perf. flops_ratio = MODEL_FLOPS /
+(chips * HLO FLOPs): how much compiled compute is useful (catches remat and
+padding waste).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+       [--mesh 16x16] [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def load_cells(art_dir: Path, mesh: str | None = None) -> list[dict]:
+    cells = []
+    for p in sorted(art_dir.glob("*.json")):
+        if p.name.endswith("FAILED.json"):
+            continue
+        rec = json.loads(p.read_text())
+        if mesh and rec.get("mesh") != mesh and \
+                not (rec.get("skipped") and mesh):
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict:
+    if rec.get("skipped"):
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "skipped": rec["reason"]}
+    n = rec["n_devices"]
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["hbm_bytes_per_device"] / HBM_BW
+    coll_s = rec["collective_wire_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    ideal = rec["model_flops"] / (n * PEAK_FLOPS)
+    if rec["kind"] == "decode":
+        # decode is memory-bound by construction: the floor is reading every
+        # argument byte (weights + cache) once per step.
+        ideal = max(ideal, rec["memory"]["argument_bytes"] / HBM_BW)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "ideal_s": ideal,
+        "roofline_fraction": ideal / bound if bound else 0.0,
+        "model_flops": rec["model_flops"],
+        "hlo_flops_total": rec["flops_per_device"] * n,
+        "flops_ratio": rec["model_flops"] / max(rec["flops_per_device"] * n, 1),
+        "hbm_fit_gib": (rec["memory"]["argument_bytes"]
+                        + rec["memory"]["temp_bytes"]) / 2**30,
+    }
+
+
+def table(rows: list[dict]) -> str:
+    out = [f"{'arch':20s} {'shape':11s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>10s} {'ideal(s)':>9s} {'frac':>6s} "
+           f"{'useful':>7s} {'GiB':>6s}"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"{r['arch']:20s} {r['shape']:11s}  -- skipped: "
+                       f"{r['skipped'][:60]}")
+            continue
+        out.append(
+            f"{r['arch']:20s} {r['shape']:11s} {r['compute_s']:9.4f} "
+            f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+            f"{r['dominant']:>10s} {r['ideal_s']:9.4f} "
+            f"{r['roofline_fraction']:6.3f} {r['flops_ratio']:7.3f} "
+            f"{r['hbm_fit_gib']:6.2f}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    cells = load_cells(Path(args.dir), args.mesh)
+    rows = [roofline_row(c) for c in cells]
+    live = [r for r in rows if "skipped" not in r]
+    live.sort(key=lambda r: r["roofline_fraction"])
+    skipped = [r for r in rows if "skipped" in r]
+    print(table(live + skipped))
+    if args.csv:
+        import csv
+        keys = [k for k in live[0]]
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            for r in live:
+                w.writerow(r)
+    worst = live[0] if live else None
+    if worst:
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"= {worst['roofline_fraction']:.3f} ({worst['dominant']}-bound)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Training launcher CLI: `python -m repro.launch.train --arch <id> ...`.
+
+Single-host CPU execution path (uses the reduced config by default so it
+actually runs here); on a real cluster the same Trainer runs under the
+production mesh plan (see dryrun.py for the lowering proof).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import get_config
+from ..train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (non-reduced) architecture")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--no-speculation", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    tcfg = TrainerConfig(n_steps=args.steps, global_batch=args.batch,
+                         seq_len=args.seq, n_micro=2, ckpt_dir=args.ckpt_dir,
+                         data_cycle=8,
+                         speculative_input=not args.no_speculation)
+    t = Trainer(cfg, tcfg, key=jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        resumed = t.maybe_restore()
+        if resumed:
+            print(f"resumed from step {resumed}")
+    hist = t.run()
+    print(f"done: {len(hist)} steps, final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model zoo: 10 assigned architectures behind one Model interface.
+
+Import submodules directly (repro.models.model, .inputs, ...). The package
+__init__ stays lazy: repro.sharding.planner depends on repro.models.param,
+and eager re-exports here would close an import cycle.
+"""
+
+
+def __getattr__(name):
+    if name == "build":
+        from .model import build
+        return build
+    if name in ("model", "inputs", "layers", "attention", "transformer",
+                "moe", "mamba2", "param"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(name)

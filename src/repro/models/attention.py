@@ -1,0 +1,160 @@
+"""GQA attention: training/prefill (full-sequence) and decode (KV cache) paths.
+
+Supports: grouped-query attention (q heads grouped per kv head), causal /
+bidirectional / prefix-LM masks, sliding windows (gemma2 local layers),
+attention-logit softcapping, partial RoPE. Pure einsum formulation so GSPMD
+can shard it under any planner fallback (head-sharded TP or context parallel).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .param import P, normal
+from .layers import apply_rope, softcap
+from ..sharding.planner import constrain
+
+
+class MaskSpec(NamedTuple):
+    causal: bool = True
+    window: Optional[int] = None     # sliding window size (local attention)
+    prefix_len: int = 0              # bidirectional prefix (paligemma)
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": P(normal(kq, (d_model, n_heads, head_dim), dtype=dtype),
+                ("d_model", "heads", "head_dim")),
+        "wk": P(normal(kk, (d_model, n_kv_heads, head_dim), dtype=dtype),
+                ("d_model", "kv_heads", "head_dim")),
+        "wv": P(normal(kv, (d_model, n_kv_heads, head_dim), dtype=dtype),
+                ("d_model", "kv_heads", "head_dim")),
+        "wo": P(normal(ko, (n_heads, head_dim, d_model), dtype=dtype),
+                ("heads", "head_dim", "d_model")),
+    }
+
+
+def _mask_bias(q_pos, k_pos, spec: MaskSpec, k_valid=None):
+    """Additive mask bias (..., Sq, Sk) from position grids."""
+    i = q_pos[..., :, None]
+    j = k_pos[..., None, :]
+    if spec.causal:
+        allowed = j <= i
+        if spec.prefix_len:
+            allowed = allowed | ((i < spec.prefix_len) & (j < spec.prefix_len))
+    else:
+        allowed = jnp.ones(jnp.broadcast_shapes(i.shape, j.shape), dtype=bool)
+    if spec.window is not None:
+        allowed = allowed & (j > i - spec.window)
+    if k_valid is not None:
+        allowed = allowed & k_valid[..., None, :]
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+def _attend(q, k, v, bias, n_kv, q_per_kv, cap):
+    """q: (B,Sq,H,Dh) grouped kv-major; k,v: (B,Sk,K,Dh); bias: (B?,Sq,Sk)."""
+    B, Sq, H, Dh = q.shape
+    q = q.reshape(B, Sq, n_kv, q_per_kv, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores * (Dh ** -0.5)
+    scores = softcap(scores, cap)
+    # bias is (B, Sq, Sk) -> broadcast over (kv, group) head axes
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def attention_full(p, x, positions, cfg, spec: MaskSpec):
+    """Training / prefill over a full sequence. Returns (out, (k, v))."""
+    xq = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    xk = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    xv = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    xq = constrain(xq, ("batch", "seq", "heads", None))
+    xk = constrain(xk, ("batch", "seq", "kv_heads", None))
+    xv = constrain(xv, ("batch", "seq", "kv_heads", None))
+    if cfg.rope_fraction > 0 and cfg.head_dim:
+        xq = apply_rope(xq, positions, cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+        xk = apply_rope(xk, positions, cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    if getattr(cfg, "attn_impl", "einsum") == "blocked":
+        out = _attend_blocked(xq, xk, xv, positions, cfg, spec)
+    else:
+        bias = _mask_bias(positions, positions, spec)
+        out = _attend(xq, xk, xv, bias, cfg.n_kv_heads, cfg.q_per_kv,
+                      cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (xk, xv)
+
+
+def _attend_blocked(q, k, v, positions, cfg, spec: MaskSpec,
+                    block_k: int = 512):
+    """Online-softmax (flash-style) attention in pure JAX: lax.scan over kv
+    blocks. HLO-level win: score/prob traffic drops from O(S^2) full-matrix
+    materialization to O(S * block); the Pallas kernel (kernels/
+    flash_attention.py) is the single-chip realization of the same schedule.
+    """
+    B, S, H, Dh = q.shape
+    KV = cfg.n_kv_heads
+    G = cfg.q_per_kv
+    nb = max(S // block_k, 1)
+    bk = S // nb
+    qg = q.reshape(B, S, KV, G, Dh)
+    k_b = jnp.moveaxis(k.reshape(B, nb, bk, KV, Dh), 1, 0)
+    v_b = jnp.moveaxis(v.reshape(B, nb, bk, KV, Dh), 1, 0)
+    pos_b = jnp.moveaxis(positions.reshape(B, nb, bk), 1, 0)
+    scale = Dh ** -0.5
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb).astype(jnp.float32) * scale
+        s = softcap(s, cfg.attn_softcap)
+        bias = _mask_bias(positions, pb, spec)          # (B, S, bk)
+        s = s + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p_blk = jnp.exp(s - m_new)
+        l_new = l * alpha + jnp.sum(p_blk, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bkgst,btkd->bkgsd", p_blk.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k_b, v_b, pos_b))
+    out = acc / jnp.maximum(l, 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg, spec: MaskSpec):
+    """One-token decode. x: (B,1,D); cache_*: (B,Smax,K,Dh); pos: (B,) int32.
+
+    Returns (out, (new_cache_k, new_cache_v)).
+    """
+    B, _, D = x.shape
+    Smax = cache_k.shape[1]
+    xq = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    xk = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    xv = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    xq = constrain(xq, ("batch", None, "heads", None))
+    if cfg.rope_fraction > 0 and cfg.head_dim:
+        pp = pos[:, None]
+        xq = apply_rope(xq, pp, cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+        xk = apply_rope(xk, pp, cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    # write new kv at pos (per-sequence positions)
+    b_idx = jnp.arange(B)
+    cache_k = cache_k.at[b_idx, pos].set(xk[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b_idx, pos].set(xv[:, 0].astype(cache_v.dtype))
+    k_pos = jnp.arange(Smax)[None, :]  # (1, Smax) broadcast over batch
+    bias = _mask_bias(pos[:, None], k_pos, spec,
+                      k_valid=(k_pos <= pos[:, None]))
+    out = _attend(xq, cache_k.astype(x.dtype), cache_v.astype(x.dtype), bias,
+                  cfg.n_kv_heads, cfg.q_per_kv, cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (cache_k, cache_v)

@@ -1,0 +1,76 @@
+"""Batch construction + abstract input specs for every (arch, shape) cell.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins (weak-type
+correct, no allocation) used by the multi-pod dry-run; `make_batch` builds
+the concrete equivalent for smoke tests / the CPU training example.
+
+Modality frontends are STUBS per the brief: the VLM gets precomputed patch
+embeddings, the audio encoder gets precomputed frame features.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def batch_struct(cfg, batch: int, seq: int, kind: str):
+    """-> dict of ShapeDtypeStruct for a train/prefill batch."""
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "vlm":
+        n_text = seq - cfg.vision.n_patches
+        out = {
+            "patch_embeds": sds((batch, cfg.vision.n_patches,
+                                 cfg.vision.embed_dim), jnp.bfloat16),
+            "tokens": sds((batch, n_text), jnp.int32),
+        }
+        if kind == "train":
+            out["labels"] = sds((batch, n_text), jnp.int32)
+        return out
+    if cfg.family == "audio":
+        out = {"frames": sds((batch, seq, cfg.audio.frame_dim), jnp.bfloat16)}
+        if kind == "train":
+            out["labels"] = sds((batch, seq), jnp.int32)
+        return out
+    out = {"tokens": sds((batch, seq), jnp.int32)}
+    if kind == "train":
+        out["labels"] = sds((batch, seq), jnp.int32)
+    return out
+
+
+def make_batch(cfg, batch: int, seq: int, kind: str, seed: int = 0):
+    """Concrete random batch matching batch_struct."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+
+    def tok(shape):
+        return jnp.asarray(rng.integers(0, V, shape), jnp.int32)
+
+    if cfg.family == "vlm":
+        n_text = seq - cfg.vision.n_patches
+        out = {
+            "patch_embeds": jnp.asarray(
+                rng.normal(size=(batch, cfg.vision.n_patches,
+                                 cfg.vision.embed_dim)), jnp.bfloat16),
+            "tokens": tok((batch, n_text)),
+        }
+        if kind == "train":
+            out["labels"] = tok((batch, n_text))
+        return out
+    if cfg.family == "audio":
+        out = {"frames": jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.audio.frame_dim)), jnp.bfloat16)}
+        if kind == "train":
+            out["labels"] = tok((batch, seq))
+        return out
+    out = {"tokens": tok((batch, seq))}
+    if kind == "train":
+        out["labels"] = tok((batch, seq))
+    return out
+
+
+def decode_inputs_struct(cfg, batch: int, max_seq: int, model):
+    """(tokens, cache) ShapeDtypeStructs for lowering decode_step."""
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    cache = model.cache_spec(batch, max_seq)
+    return tokens, cache

@@ -1,0 +1,122 @@
+"""Shared neural layers: norms, RoPE, MLPs, softcaps, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import P, normal
+from ..sharding.planner import constrain
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x, cap):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)), rot
+
+
+def apply_rope(x, positions, head_dim: int, fraction: float = 1.0,
+               theta: float = 10_000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    inv_freq, rot = rope_freqs(head_dim, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, activation, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": P(normal(k1, (d_model, d_ff), dtype=dtype), ("d_model", "ffn")),
+            "wi_up": P(normal(k2, (d_model, d_ff), dtype=dtype), ("d_model", "ffn")),
+            "wo": P(normal(k3, (d_ff, d_model), dtype=dtype), ("ffn", "d_model")),
+        }
+    return {
+        "wi": P(normal(k1, (d_model, d_ff), dtype=dtype), ("d_model", "ffn")),
+        "wo": P(normal(k2, (d_ff, d_model), dtype=dtype), ("ffn", "d_model")),
+    }
+
+
+def apply_mlp(p, x, activation):
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", x, p["wi_gate"].astype(x.dtype))
+        up = jnp.einsum("...d,df->...f", x, p["wi_up"].astype(x.dtype))
+        act = jax.nn.silu(gate) if activation == "swiglu" else \
+            jax.nn.gelu(gate, approximate=True)
+        h = act * up
+        if h.ndim == 3:
+            h = constrain(h, ("batch", "seq", "ffn"))
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype)),
+                        approximate=True)
+        if h.ndim == 3:
+            h = constrain(h, ("batch", "seq", "ffn"))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab, d_model, dtype):
+    return P(normal(key, (vocab, d_model), scale=1.0, dtype=dtype),
+             ("vocab", "d_model"))
+
+
+def embed_tokens(table, tokens, scale_by_dim: bool):
+    x = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(table.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def logits_head(w, x, final_cap=None):
+    """w: (d_model, vocab); returns float32 logits (softcapped if configured)."""
+    out = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype)).astype(jnp.float32)
+    return softcap(out, final_cap)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE over valid positions; logits float32 (B, S, V)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

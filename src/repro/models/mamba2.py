@@ -1,0 +1,258 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training path + O(1)
+decode path [arXiv:2405.21060].
+
+Training uses the SSD chunked algorithm: within chunks of length Q the
+quadratic "attention-like" form, across chunks a linear state recurrence —
+the TPU-friendly formulation (batched matmuls for the MXU instead of a long
+sequential scan).
+
+TPU-native sharding note (DESIGN.md §5): the reference CUDA implementation
+fuses z/x/B/C/dt into one in_proj and splits the result. Splitting a
+model-sharded activation at non-shard-aligned offsets forces GSPMD halo
+exchanges, so we keep **separate projections per component** — column-
+parallel in ("model") for x/z/dt, replicated for the small B/C heads, and a
+row-parallel out_proj. The SSD core is head-parallel over "model" with zero
+intra-block resharding. Decode carries (conv_x/B/C, ssm) states per layer.
+
+Shapes: d_inner = expand * d_model; H = d_inner / head_dim SSD heads;
+P = head_dim; N = d_state; G = n_groups (B/C shared across heads per group).
+A reference recurrent implementation lives in `ssd_reference`; tests assert
+allclose between the two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import P as Pm, normal
+from ..sharding.planner import constrain
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.d_state, s.n_groups
+
+
+def init_mamba_block(key, cfg, dtype):
+    s = cfg.ssm
+    d_inner, H, P, N, G = dims(cfg)
+    GN = G * N
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": Pm(jnp.zeros((cfg.d_model,), dtype), ("d_model",)),
+        "in_z": Pm(normal(ks[0], (cfg.d_model, d_inner), dtype=dtype),
+                   ("d_model", "ssm_in")),
+        "in_x": Pm(normal(ks[1], (cfg.d_model, d_inner), dtype=dtype),
+                   ("d_model", "ssm_in")),
+        "in_B": Pm(normal(ks[2], (cfg.d_model, GN), dtype=dtype),
+                   ("d_model", "ssm_bc")),
+        "in_C": Pm(normal(ks[3], (cfg.d_model, GN), dtype=dtype),
+                   ("d_model", "ssm_bc")),
+        "in_dt": Pm(normal(ks[4], (cfg.d_model, H), dtype=dtype),
+                    ("d_model", "ssm_heads")),
+        "conv_x": Pm(normal(ks[5], (s.conv_width, d_inner), dtype=dtype),
+                     ("conv", "ssm_in")),
+        "conv_B": Pm(normal(ks[6], (s.conv_width, GN), dtype=dtype),
+                     ("conv", "ssm_bc")),
+        "conv_C": Pm(normal(ks[7], (s.conv_width, GN), dtype=dtype),
+                     ("conv", "ssm_bc")),
+        "conv_x_b": Pm(jnp.zeros((d_inner,), dtype), ("ssm_in",)),
+        "conv_B_b": Pm(jnp.zeros((GN,), dtype), ("ssm_bc",)),
+        "conv_C_b": Pm(jnp.zeros((GN,), dtype), ("ssm_bc",)),
+        "A_log": Pm(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+                    ("ssm_heads",)),
+        "D": Pm(jnp.ones((H,), dtype), ("ssm_heads",)),
+        "dt_bias": Pm(jnp.zeros((H,), dtype), ("ssm_heads",)),
+        "norm": Pm(jnp.zeros((d_inner,), dtype), ("ssm_in",)),
+        "out_proj": Pm(normal(ks[0], (d_inner, cfg.d_model), dtype=dtype),
+                       ("ssm_in", "d_model")),
+    }
+
+
+def _conv_full(x, w, b):
+    """Causal depthwise conv over (B, S, C): pad left, width-W taps."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i: i + x.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(state, new_col, w, b):
+    """Decode conv: state (B, W-1, C), new_col (B, 1, C) -> (out (B,C), state)."""
+    window = jnp.concatenate([state.astype(new_col.dtype), new_col], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def _gated_norm(y, z, w, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return ((yf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(y.dtype)
+
+
+def _rms(x, w, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core — chunked (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, chunk, h0=None, intra_dtype=jnp.float32):
+    """SSD over a full sequence.
+
+    xh: (B,S,H,P) head inputs; dt: (B,S,H) softplus'd steps; A: (H,) negative;
+    Bc/Cc: (B,S,N) (G == 1, broadcast over heads).
+    Returns (y (B,S,H,P), h_final (B,H,P,N) float32).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "sequence must divide the SSD chunk size"
+    nc = S // Q
+
+    f32 = jnp.float32
+    xc = xh.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bcc = Bc.reshape(Bsz, nc, Q, N).astype(f32)
+    Ccc = Cc.reshape(Bsz, nc, Q, N).astype(f32)
+    dtx = xc.astype(f32) * dtc[..., None]                          # (B,nc,Q,H,P)
+
+    log_a = dtc * A.astype(f32)                                    # (B,nc,Q,H) < 0
+    cs = jnp.cumsum(log_a, axis=2)                                 # inclusive
+    # intra-chunk: M[i,j] = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]             # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Ccc.astype(intra_dtype),
+                    Bcc.astype(intra_dtype))                       # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcijh,bcij,bcjhp->bcihp", M.astype(intra_dtype),
+                         CB, dtx.astype(intra_dtype)).astype(jnp.float32)
+
+    # chunk-boundary states: S_c = sum_j exp(cs_last - cs_j) B_j (x) dtx_j
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)                     # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_end, Bcc, dtx)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                         # (B,nc,H)
+
+    def step(h, inp):
+        s_c, d_c = inp
+        h_new = d_c[:, :, None, None] * h + s_c
+        return h_new, h                                            # emit h_{c-1}
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, Pd, N), f32)
+    states_t = jnp.moveaxis(states, 1, 0)                          # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                      # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)                           # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Ccc, h_prev, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd).astype(xh.dtype)
+    return y, h_final
+
+
+def ssd_reference(xh, dt, A, Bc, Cc):
+    """Naive O(S) recurrent oracle (fp32) for tests. Bc/Cc: (B,S,N)."""
+    Bsz, S, H, Pd = xh.shape
+    f32 = jnp.float32
+    a = jnp.exp(dt.astype(f32) * A.astype(f32))                    # (B,S,H)
+    Bn = Bc.astype(f32)
+    Cn = Cc.astype(f32)
+    dtx = xh.astype(f32) * dt.astype(f32)[..., None]
+
+    def step(h, t):
+        h = a[:, t][:, :, None, None] * h + \
+            jnp.einsum("bhp,bn->bhpn", dtx[:, t], Bn[:, t])
+        y = jnp.einsum("bhpn,bn->bhp", h, Cn[:, t])
+        return h, y
+
+    N = Bc.shape[-1]
+    h0 = jnp.zeros((Bsz, H, Pd, N), f32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level apply
+# ---------------------------------------------------------------------------
+
+
+def _project(p, hn, dtype):
+    z = jnp.einsum("bsd,de->bse", hn, p["in_z"].astype(dtype))
+    xin = jnp.einsum("bsd,de->bse", hn, p["in_x"].astype(dtype))
+    Bc = jnp.einsum("bsd,dn->bsn", hn, p["in_B"].astype(dtype))
+    Cc = jnp.einsum("bsd,dn->bsn", hn, p["in_C"].astype(dtype))
+    dtr = jnp.einsum("bsd,dh->bsh", hn, p["in_dt"].astype(dtype))
+    return z, xin, Bc, Cc, dtr
+
+
+def apply_mamba_full(p, x, cfg):
+    """Training/prefill. x: (B,S,D) -> (out, states) where states =
+    (conv_x, conv_B, conv_C [last W-1 pre-activation inputs], ssm_state)."""
+    s = cfg.ssm
+    d_inner, H, Pd, N, G = dims(cfg)
+    dtype = x.dtype
+    hn = _rms(x, p["ln"], cfg.norm_eps)
+    z, xin, Bc, Cc, dtr = _project(p, hn, dtype)
+    W = s.conv_width
+    st = (xin[:, -(W - 1):].astype(jnp.bfloat16),
+          Bc[:, -(W - 1):].astype(jnp.bfloat16),
+          Cc[:, -(W - 1):].astype(jnp.bfloat16))
+    xin = _conv_full(xin, p["conv_x"].astype(dtype), p["conv_x_b"].astype(dtype))
+    Bc = _conv_full(Bc, p["conv_B"].astype(dtype), p["conv_B_b"].astype(dtype))
+    Cc = _conv_full(Cc, p["conv_C"].astype(dtype), p["conv_C_b"].astype(dtype))
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], H, Pd)
+    xh = constrain(xh, ("batch", None, "ssm_heads", None))
+    y, h_final = ssd_chunked(xh, dt, A, Bc, Cc, s.chunk,
+                             intra_dtype=jnp.dtype(s.intra_dtype))
+    y = y + xh * p["D"].astype(dtype)[:, None]
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    return x + out, st + (h_final,)
+
+
+def apply_mamba_decode(p, x, states, cfg):
+    """One-token decode. x: (B,1,D); states = (conv_x (B,W-1,d_inner),
+    conv_B (B,W-1,GN), conv_C (B,W-1,GN), ssm (B,H,P,N) f32)."""
+    s = cfg.ssm
+    d_inner, H, Pd, N, G = dims(cfg)
+    dtype = x.dtype
+    conv_x, conv_B, conv_C, ssm_state = states
+    hn = _rms(x, p["ln"], cfg.norm_eps)
+    z, xin, Bc, Cc, dtr = _project(p, hn, dtype)
+    xo, conv_x = _conv_step(conv_x, xin, p["conv_x"].astype(dtype),
+                            p["conv_x_b"].astype(dtype))
+    Bo, conv_B = _conv_step(conv_B, Bc, p["conv_B"].astype(dtype),
+                            p["conv_B_b"].astype(dtype))
+    Co, conv_C = _conv_step(conv_C, Cc, p["conv_C"].astype(dtype),
+                            p["conv_C_b"].astype(dtype))
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))        # (B,1,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A)                                     # (B,H)
+    xh = xo.reshape(-1, H, Pd).astype(jnp.float32)
+    dtx = xh * dt[:, 0][..., None]
+    h = a[:, :, None, None] * ssm_state + \
+        jnp.einsum("bhp,bn->bhpn", dtx, Bo.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Co.astype(jnp.float32))
+    y = y + xh * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(-1, 1, d_inner).astype(dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    new_states = (conv_x.astype(jnp.bfloat16), conv_B.astype(jnp.bfloat16),
+                  conv_C.astype(jnp.bfloat16), h)
+    return x + out, new_states

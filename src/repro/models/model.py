@@ -1,0 +1,365 @@
+"""Unified model interface over all 10 assigned architectures.
+
+`build(cfg)` returns a `Model` with:
+  init(key)                 -> P-annotated param pytree (use values_of for jit)
+  loss_fn(params, batch)    -> (loss, metrics)        [training]
+  forward(params, batch)    -> (logits, aux)
+  prefill(params, batch, max_seq) -> (logits, cache)  [serving]
+  decode_step(params, tokens, cache) -> (logits, cache)
+  cache_spec(batch, max_seq) -> ShapeDtypeStruct pytree (dry-run decode input)
+
+Cache convention: a dict with family-specific leaves plus "lengths" (B,) int32
+holding the current per-sequence position.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .param import P as Pm, values_of, normal
+from . import layers as L
+from . import transformer as TF
+from . import mamba2 as M2
+from . import attention as A
+
+
+@dataclass
+class Model:
+    cfg: Any
+    init: Callable
+    loss_fn: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_spec: Callable
+
+
+def build(cfg) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return _build_transformer(cfg)
+    if cfg.family == "ssm":
+        return _build_ssm(cfg)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# Transformer families
+# ---------------------------------------------------------------------------
+
+
+def _build_transformer(cfg) -> Model:
+    def init(key):
+        return TF.init_params(key, cfg)
+
+    def loss_fn(params, batch):
+        return TF.loss_fn(params, batch, cfg)
+
+    def forward(params, batch):
+        return TF.forward(params, batch, cfg)
+
+    def prefill(params, batch, max_seq=None):
+        logits, caches, lengths = TF.prefill(params, batch, cfg, max_seq)
+        return logits, {"kv": caches, "lengths": lengths}
+
+    def decode_step(params, tokens, cache):
+        logits, kv, lengths = TF.decode_step(params, tokens, cache["kv"],
+                                             cache["lengths"], cfg)
+        return logits, {"kv": kv, "lengths": lengths}
+
+    def cache_spec(batch_size, max_seq, dtype=jnp.bfloat16):
+        pat = TF.block_pattern(cfg)
+        shape = (pat.steps, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        kv = tuple({"k": jax.ShapeDtypeStruct(shape, dtype),
+                    "v": jax.ShapeDtypeStruct(shape, dtype)}
+                   for _ in pat.specs)
+        return {"kv": kv,
+                "lengths": jax.ShapeDtypeStruct((batch_size,), jnp.int32)}
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# Pure SSM (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_lm_head(params, x, cfg):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.logits_head(params["lm_head"], x, cfg.final_softcap)
+
+
+def _build_ssm(cfg) -> Model:
+    Vp = TF.padded_vocab(cfg)
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+        blocks = jax.vmap(lambda k: M2.init_mamba_block(k, cfg,
+                                                        jnp.dtype(cfg.param_dtype))
+                          )(layer_keys)
+        blocks = jax.tree.map(lambda p: Pm(p.value, ("layers",) + p.axes),
+                              blocks, is_leaf=lambda v: isinstance(v, Pm))
+        return {
+            "embed": L.init_embed(ks[1], Vp, cfg.d_model,
+                                  jnp.dtype(cfg.param_dtype)),
+            "blocks": blocks,
+            "final_norm": Pm(jnp.zeros((cfg.d_model,),
+                                       jnp.dtype(cfg.param_dtype)), ("d_model",)),
+            "lm_head": Pm(normal(ks[2], (cfg.d_model, Vp),
+                                 dtype=jnp.dtype(cfg.param_dtype)),
+                          ("d_model", "vocab")),
+        }
+
+    def _stack(params, x, remat=True, collect_states=False):
+        def body(h, layer_p):
+            h, states = M2.apply_mamba_full(layer_p, h, cfg)
+            return h, states if collect_states else None
+
+        body_fn = body
+        if remat and cfg.remat != "none" and not collect_states:
+            body_fn = jax.checkpoint(body)
+        x, states = jax.lax.scan(body_fn, x, params["blocks"])
+        return x, states
+
+    def forward(params, batch, remat=True):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"].astype(cdt), batch["tokens"],
+                           cfg.embed_scale)
+        x, _ = _stack(params, x, remat)
+        return _ssm_lm_head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+    def loss_fn(params, batch):
+        logits, _ = forward(params, batch)
+        labels = batch["labels"]
+        ce = L.cross_entropy(logits[:, :-1, :cfg.vocab_size],
+                             jnp.maximum(labels[:, 1:], 0),
+                             mask=labels[:, 1:] >= 0)
+        return ce, {"loss": ce, "ce": ce,
+                    "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch, max_seq=None):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"].astype(cdt), batch["tokens"],
+                           cfg.embed_scale)
+        x, states = _stack(params, x, remat=False, collect_states=True)
+        logits = _ssm_lm_head(params, x[:, -1:], cfg)
+        B = x.shape[0]
+        cache = {"states": states,
+                 "lengths": jnp.full((B,), x.shape[1], jnp.int32)}
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"].astype(cdt), tokens, cfg.embed_scale)
+
+        def body(h, scanned):
+            layer_p, states = scanned
+            h, states = M2.apply_mamba_decode(layer_p, h, states, cfg)
+            return h, states
+
+        x, states = jax.lax.scan(body, x, (params["blocks"], cache["states"]))
+        logits = _ssm_lm_head(params, x, cfg)
+        return logits, {"states": states, "lengths": cache["lengths"] + 1}
+
+    def cache_spec(batch_size, max_seq, dtype=jnp.bfloat16):
+        return {
+            "states": _mamba_state_spec(cfg, (cfg.n_layers,), batch_size),
+            "lengths": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        }
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, cache_spec)
+
+
+def _mamba_state_spec(cfg, lead: tuple, batch_size: int):
+    """ShapeDtypeStructs for (conv_x, conv_B, conv_C, ssm) with leading dims."""
+    d_inner, H, Pd, N, G = M2.dims(cfg)
+    W = cfg.ssm.conv_width
+    GN = G * N
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds(lead + (batch_size, W - 1, d_inner), jnp.bfloat16),
+        sds(lead + (batch_size, W - 1, GN), jnp.bfloat16),
+        sds(lead + (batch_size, W - 1, GN), jnp.bfloat16),
+        sds(lead + (batch_size, H, Pd, N), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): mamba groups + shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_layout(cfg):
+    per = cfg.hybrid.shared_attn_every          # mamba layers per group + attn
+    n_groups = cfg.n_layers // per              # 13 for 81 layers, per=6
+    inner = per - 1                             # mamba layers per group
+    tail = cfg.n_layers - n_groups * per        # trailing mamba layers
+    return n_groups, inner, tail
+
+
+def _build_hybrid(cfg) -> Model:
+    Vp = TF.padded_vocab(cfg)
+    n_groups, inner, tail = _hybrid_layout(cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    spec = A.MaskSpec(causal=True, window=None, prefix_len=0)
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+
+        def stack_mamba(key, n, extra_axes):
+            keys = jax.random.split(key, n)
+            blocks = jax.vmap(lambda k: M2.init_mamba_block(k, cfg, pdt))(keys)
+            return jax.tree.map(lambda p: Pm(p.value, extra_axes + p.axes),
+                                blocks, is_leaf=lambda v: isinstance(v, Pm))
+
+        # (n_groups, inner, ...) nested stack
+        gkeys = jax.random.split(ks[0], n_groups)
+        groups = jax.vmap(lambda k: jax.vmap(
+            lambda k2: M2.init_mamba_block(k2, cfg, pdt)
+        )(jax.random.split(k, inner)))(gkeys)
+        groups = jax.tree.map(
+            lambda p: Pm(p.value, ("layers", "layers") + p.axes), groups,
+            is_leaf=lambda v: isinstance(v, Pm))
+        params = {
+            "embed": L.init_embed(ks[1], Vp, cfg.d_model, pdt),
+            "groups": groups,
+            "shared_attn": TF.init_block(ks[2], cfg, pdt),
+            "tail": stack_mamba(ks[3], tail, ("layers",)) if tail else None,
+            "final_norm": Pm(jnp.zeros((cfg.d_model,), pdt), ("d_model",)),
+            "lm_head": Pm(normal(ks[4], (cfg.d_model, Vp), dtype=pdt),
+                          ("d_model", "vocab")),
+        }
+        return params
+
+    def _run_full(params, x, remat=True, collect=False):
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_p):
+            h = carry
+            states = []
+            for i in range(inner):
+                sub = jax.tree.map(lambda a: a[i], group_p)
+                h, st = M2.apply_mamba_full(sub, h, cfg)
+                states.append(st)
+            h, kv, _ = TF.apply_block(shared, h, positions, cfg, spec)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+            return h, (stacked, kv) if collect else None
+
+        body = group_body
+        if remat and cfg.remat != "none" and not collect:
+            body = jax.checkpoint(group_body)
+        x, collected = jax.lax.scan(body, x, params["groups"])
+
+        tail_states = []
+        if tail:
+            def tail_body(carry, layer_p):
+                h, st = M2.apply_mamba_full(layer_p, carry, cfg)
+                return h, st if collect else None
+            tb = tail_body
+            if remat and cfg.remat != "none" and not collect:
+                tb = jax.checkpoint(tail_body)
+            x, tail_collected = jax.lax.scan(tb, x, params["tail"])
+        else:
+            tail_collected = None
+        return x, collected, tail_collected
+
+    def forward(params, batch, remat=True):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"].astype(cdt), batch["tokens"],
+                           cfg.embed_scale)
+        x, _, _ = _run_full(params, x, remat)
+        return _ssm_lm_head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+    def loss_fn(params, batch):
+        logits, _ = forward(params, batch)
+        labels = batch["labels"]
+        ce = L.cross_entropy(logits[:, :-1, :cfg.vocab_size],
+                             jnp.maximum(labels[:, 1:], 0),
+                             mask=labels[:, 1:] >= 0)
+        return ce, {"loss": ce, "ce": ce,
+                    "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch, max_seq=None):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"].astype(cdt), batch["tokens"],
+                           cfg.embed_scale)
+        B, S, _ = x.shape
+        max_seq = max_seq or S
+        x, collected, tail_collected = _run_full(params, x, remat=False,
+                                                 collect=True)
+        g_states, kv = collected
+
+        def pad_kv(c):
+            return jnp.pad(c.astype(jnp.bfloat16),
+                           ((0, 0), (0, 0), (0, max_seq - S), (0, 0), (0, 0)))
+
+        cache = {
+            "groups": g_states,
+            "attn_k": pad_kv(kv["k"]), "attn_v": pad_kv(kv["v"]),
+            "tail": tail_collected if tail else None,
+            "lengths": jnp.full((B,), S, jnp.int32),
+        }
+        logits = _ssm_lm_head(params, x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"].astype(cdt), tokens, cfg.embed_scale)
+        shared = params["shared_attn"]
+        pos = cache["lengths"]
+
+        def group_body(carry, scanned):
+            h = carry
+            group_p, g_states, ck, cv = scanned
+            new_states = []
+            for i in range(inner):
+                sub = jax.tree.map(lambda a: a[i], group_p)
+                st_i = jax.tree.map(lambda a: a[i], g_states)
+                h, st2 = M2.apply_mamba_decode(sub, h, st_i, cfg)
+                new_states.append(st2)
+            h, kvc, _ = TF.apply_block(shared, h, None, cfg, spec,
+                                       cache={"k": ck, "v": cv}, pos=pos)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+            return h, (stacked, kvc["k"], kvc["v"])
+
+        x, (g_states, ak, av) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["groups"], cache["attn_k"],
+             cache["attn_v"]))
+
+        if tail:
+            def tail_body(carry, scanned):
+                layer_p, st = scanned
+                h, st2 = M2.apply_mamba_decode(layer_p, carry, st, cfg)
+                return h, st2
+            x, t_states = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["tail"]))
+        else:
+            t_states = None
+        logits = _ssm_lm_head(params, x, cfg)
+        return logits, {"groups": g_states, "attn_k": ak, "attn_v": av,
+                        "tail": t_states, "lengths": cache["lengths"] + 1}
+
+    def cache_spec(batch_size, max_seq, dtype=jnp.bfloat16):
+        sds = jax.ShapeDtypeStruct
+        return {
+            "groups": _mamba_state_spec(cfg, (n_groups, inner), batch_size),
+            "attn_k": sds((n_groups, batch_size, max_seq, cfg.n_kv_heads,
+                           cfg.head_dim), jnp.bfloat16),
+            "attn_v": sds((n_groups, batch_size, max_seq, cfg.n_kv_heads,
+                           cfg.head_dim), jnp.bfloat16),
+            "tail": _mamba_state_spec(cfg, (tail,), batch_size)
+            if tail else None,
+            "lengths": sds((batch_size,), jnp.int32),
+        }
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, cache_spec)

@@ -1,0 +1,89 @@
+"""Mixture-of-Experts layer: Switch/GShard-style einsum dispatch with capacity.
+
+Expert weights carry the "experts" logical axis so the planner maps them to
+expert parallelism over the mesh "model" axis (64 and 128 experts both divide
+16); per-expert matrices additionally FSDP-shard over "data" (Arctic's experts
+are the bulk of 480B params). Token routing becomes an all-to-all under GSPMD.
+
+olmoe: 64 experts, top-8.  arctic: 128 experts, top-2 + parallel dense FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import P, normal
+from .layers import init_mlp, apply_mlp
+from ..sharding.planner import constrain
+
+
+def init_moe(key, d_model, moe_cfg, activation, dtype):
+    E, F = moe_cfg.n_experts, moe_cfg.d_ff
+    kr, kg, ku, ko, kd = jax.random.split(key, 5)
+    p = {
+        "router": P(normal(kr, (d_model, E)), ("d_model", "experts")),
+        "wi_gate": P(normal(kg, (E, d_model, F), dtype=dtype),
+                     ("experts", "d_model", "e_ffn")),
+        "wi_up": P(normal(ku, (E, d_model, F), dtype=dtype),
+                   ("experts", "d_model", "e_ffn")),
+        "wo": P(normal(ko, (E, F, d_model), dtype=dtype),
+                ("experts", "e_ffn", "d_model")),
+    }
+    if moe_cfg.dense_residual:
+        p["dense"] = init_mlp(kd, d_model, moe_cfg.dense_d_ff, activation, dtype)
+    return p
+
+
+def _capacity(S, moe_cfg):
+    c = int(S * moe_cfg.top_k / moe_cfg.n_experts * moe_cfg.capacity_factor)
+    return max(c, moe_cfg.top_k)
+
+
+def apply_moe(p, x, moe_cfg, activation):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = moe_cfg.n_experts, moe_cfg.top_k
+    C = _capacity(S, moe_cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Build dispatch/combine tensors slot by slot (K is small: 2 or 8).
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)     # (B,S,K,E)
+    # position of each (token, slot) in its expert's buffer: cumulative count
+    # over the flattened (S*K) slot order.
+    flat = onehot.transpose(0, 2, 1, 3).reshape(B, K * S, E)      # slot-major
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat               # (B,K*S,E)
+    pos = pos_in_expert.reshape(B, K, S, E).transpose(0, 2, 1, 3)  # (B,S,K,E)
+    pos = jnp.sum(pos * onehot, axis=-1)                          # (B,S,K)
+    keep = (pos < C) & (gate_vals > 0)
+    gates = jnp.where(keep, gate_vals, 0.0)
+
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch: (B,S,E,C); combine adds the gate weight
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_oh)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", onehot, pos_oh, gates)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)  # (B,E,C,D)
+    xe = constrain(xe, ("batch", "experts", None, None))
+    gate_h = jnp.einsum("becd,edf->becf", xe, p["wi_gate"].astype(x.dtype))
+    up_h = jnp.einsum("becd,edf->becf", xe, p["wi_up"].astype(x.dtype))
+    act = jax.nn.silu(gate_h) if activation == "swiglu" else \
+        jax.nn.gelu(gate_h, approximate=True)
+    ye = jnp.einsum("becf,efd->becd", act * up_h, p["wo"].astype(x.dtype))
+    ye = constrain(ye, ("batch", "experts", None, None))
+    out = jnp.einsum("becd,bsec->bsd", ye, combine.astype(x.dtype))
+
+    # Switch-style load-balance auxiliary loss.
+    density = jnp.mean(onehot[:, :, 0, :], axis=1)   # fraction routed (top-1)
+    router_prob = jnp.mean(probs, axis=1)            # (B,E)
+    aux = jnp.mean(jnp.sum(density * router_prob, axis=-1)) * E
+    aux = moe_cfg.aux_loss_weight * aux
+
+    if "dense" in p:
+        out = out + apply_mlp(p["dense"], x, activation)
+    return out, aux

@@ -1,0 +1,62 @@
+"""Parameters carry logical-axis metadata for the sharding planner.
+
+`P(value, axes)` wraps an array with logical axis names. P is registered as a
+pytree node whose *aux data* is the axes tuple, so jax transformations (vmap
+in stacked-layer init, eval_shape for the dry-run) flow through the value
+while the metadata stays static. `values_of` strips the wrappers for jit'd
+code; the planner maps the meta tree to PartitionSpecs directly.
+
+Logical axis vocabulary:
+  "layers"   scan-stacked layer dim           "vocab"   vocabulary
+  "d_model"  residual width                   "heads"   attention q heads
+  "kv_heads" attention kv heads               "head_dim" per-head width
+  "ffn"      MLP hidden                       "experts" MoE expert dim
+  "e_ffn"    per-expert hidden                "ssm_in"  mamba inner width
+  "ssm_state" SSD state dim                   "ssm_heads" SSD heads
+  "conv"     conv kernel taps                 "patch"   modality-stub width
+  None = never sharded
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class P:
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value: Any, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"P(shape={shape}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    P,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: P(children[0], axes),
+)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, P)
+
+
+def values_of(tree):
+    """Strip P wrappers -> plain array pytree (same structure)."""
+    return jax.tree.map(lambda p: p.value if is_meta(p) else p, tree,
+                        is_leaf=is_meta)
+
+
+def map_meta(fn, tree):
+    """Map fn(P) over meta leaves, producing a plain tree of fn results."""
+    return jax.tree.map(lambda p: fn(p), tree, is_leaf=is_meta)
+
+
+def normal(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)

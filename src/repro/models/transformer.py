@@ -1,0 +1,269 @@
+"""Transformer LM stack for dense / moe / vlm / audio families.
+
+Layers are scanned over "pattern steps" to keep the HLO small at 512
+partitions: a pattern is the repeating unit (1 block for most archs,
+[local, global] for gemma2), and `lax.scan` runs over stacked per-step
+parameters. KV caches mirror the pattern structure with a leading steps dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import P, normal
+from . import layers as L
+from . import attention as A
+from . import moe as MOE
+from ..sharding.planner import constrain
+
+
+class Pattern(NamedTuple):
+    specs: tuple            # tuple[A.MaskSpec] — one per block in the unit
+    steps: int              # scan length
+
+
+def block_pattern(cfg, prefix_len: int = 0) -> Pattern:
+    if cfg.alt_local_global:
+        assert cfg.n_layers % 2 == 0
+        local = A.MaskSpec(causal=cfg.causal, window=cfg.sliding_window,
+                           prefix_len=prefix_len)
+        glob = A.MaskSpec(causal=cfg.causal, window=None, prefix_len=prefix_len)
+        return Pattern((local, glob), cfg.n_layers // 2)
+    spec = A.MaskSpec(causal=cfg.causal, window=cfg.sliding_window,
+                      prefix_len=prefix_len)
+    return Pattern((spec,), cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": P(jnp.zeros((cfg.d_model,), dtype), ("d_model",)),
+        "attn": A.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim, dtype),
+        "ln2": P(jnp.zeros((cfg.d_model,), dtype), ("d_model",)),
+    }
+    if cfg.moe is not None:
+        p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.activation, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    if cfg.post_block_norms:
+        p["ln1_post"] = P(jnp.zeros((cfg.d_model,), dtype), ("d_model",))
+        p["ln2_post"] = P(jnp.zeros((cfg.d_model,), dtype), ("d_model",))
+    return p
+
+
+def apply_block(p, x, positions, cfg, spec, cache=None, pos=None):
+    """Returns (x, new_cache_or_kv, aux_loss)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cache is None:
+        attn_out, kv = A.attention_full(p["attn"], h, positions, cfg, spec)
+    else:
+        attn_out, kv = A.attention_decode(p["attn"], h, cache["k"], cache["v"],
+                                          pos, cfg, spec)
+    if cfg.post_block_norms:
+        attn_out = L.rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        mlp_out, aux = MOE.apply_moe(p["moe"], h, cfg.moe, cfg.activation)
+    else:
+        mlp_out = L.apply_mlp(p["mlp"], h, cfg.activation)
+    if cfg.post_block_norms:
+        mlp_out = L.rms_norm(mlp_out, p["ln2_post"], cfg.norm_eps)
+    x = x + mlp_out
+    if cache is None:
+        new_cache = {"k": kv[0], "v": kv[1]}
+    else:
+        new_cache = {"k": kv[0], "v": kv[1]}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(cfg) -> int:
+    return (cfg.vocab_size + 31) // 32 * 32
+
+
+def init_params(key, cfg, dtype=None):
+    """Returns a P-annotated pytree. Use jax.eval_shape for abstract init."""
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    pat = block_pattern(cfg)
+    keys = jax.random.split(key, 8)
+    Vp = padded_vocab(cfg)
+
+    def init_step(k):
+        sub = jax.random.split(k, len(pat.specs))
+        return tuple(init_block(sk, cfg, dtype) for sk in sub)
+
+    step_keys = jax.random.split(keys[0], pat.steps)
+    blocks = jax.vmap(init_step)(step_keys)  # leading steps dim on each leaf
+    blocks = jax.tree.map(
+        lambda p: P(p.value, ("layers",) + p.axes), blocks,
+        is_leaf=lambda v: isinstance(v, P))
+
+    params = {
+        "embed": L.init_embed(keys[1], Vp, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": P(jnp.zeros((cfg.d_model,), dtype), ("d_model",)),
+        "lm_head": P(normal(keys[2], (cfg.d_model, Vp), dtype=dtype),
+                     ("d_model", "vocab")),
+    }
+    if cfg.vision is not None:
+        params["vision_proj"] = P(
+            normal(keys[3], (cfg.vision.embed_dim, cfg.d_model), dtype=dtype),
+            ("patch", "d_model"))
+    if cfg.audio is not None:
+        params["frame_proj"] = P(
+            normal(keys[4], (cfg.audio.frame_dim, cfg.d_model), dtype=dtype),
+            ("patch", "d_model"))
+    return params
+
+
+def _embed_inputs(params, batch, cfg):
+    """-> (x (B,S,D), prefix_len)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.vision is not None:
+        pe = jnp.einsum("bpe,ed->bpd", batch["patch_embeds"].astype(cdt),
+                        params["vision_proj"].astype(cdt))
+        tok = L.embed_tokens(params["embed"].astype(cdt), batch["tokens"],
+                             cfg.embed_scale)
+        return jnp.concatenate([pe, tok], axis=1), cfg.vision.n_patches
+    if cfg.audio is not None:
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(cdt),
+                       params["frame_proj"].astype(cdt))
+        return x, 0
+    x = L.embed_tokens(params["embed"].astype(cdt), batch["tokens"],
+                       cfg.embed_scale)
+    return x, 0
+
+
+def _scan_blocks(params, x, positions, cfg, prefix_len, remat=True):
+    pat = block_pattern(cfg, prefix_len)
+
+    def body(carry, step_params):
+        h = constrain(carry, ("batch", "seq", None))
+        aux_t = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(pat.specs):
+            h, _, aux = apply_block(step_params[i], h, positions, cfg, spec)
+            aux_t = aux_t + aux
+        return h, aux_t
+
+    if remat and cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    x, auxes = jax.lax.scan(body, x, params["blocks"])
+    return x, jnp.sum(auxes)
+
+
+def forward(params, batch, cfg, remat=True):
+    """Full forward to float32 logits. batch: tokens/labels (+ stubs)."""
+    x, prefix_len = _embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, aux = _scan_blocks(params, x, positions, cfg, prefix_len, remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_head(params["lm_head"], x, cfg.final_softcap)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, remat=True):
+    """Next-token (or frame-target) CE + MoE aux. Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg, remat)
+    labels = batch["labels"]
+    V = cfg.vocab_size
+    if cfg.vision is not None:
+        # loss only over the text suffix
+        logits = logits[:, cfg.vision.n_patches:]
+    if not cfg.causal:
+        ce = L.cross_entropy(logits[..., :V], jnp.maximum(labels, 0),
+                             mask=labels >= 0)
+    else:
+        # predict token t+1 at position t
+        ce = L.cross_entropy(logits[:, :-1, :V], jnp.maximum(labels[:, 1:], 0),
+                             mask=labels[:, 1:] >= 0)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    """Abstract/zero KV cache matching the block pattern structure."""
+    pat = block_pattern(cfg)
+    shape = (pat.steps, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return tuple({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+                 for _ in pat.specs)
+
+
+def prefill(params, batch, cfg, max_seq=None):
+    """Run the prompt; returns (last-position logits, caches, lengths)."""
+    x, prefix_len = _embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    pat = block_pattern(cfg, prefix_len)
+
+    def body(carry, step_params):
+        h = carry
+        kvs = []
+        for i, spec in enumerate(pat.specs):
+            h, kv, _ = apply_block(step_params[i], h, positions, cfg, spec)
+            kvs.append(kv)
+        return h, tuple(kvs)
+
+    x, kv_stacked = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_head(params["lm_head"], x[:, -1:], cfg.final_softcap)
+
+    def pad_cache(c):
+        pad = max_seq - S
+        return jnp.pad(c.astype(jnp.bfloat16),
+                       ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+    caches = tuple({"k": pad_cache(kv["k"]), "v": pad_cache(kv["v"])}
+                   for kv in kv_stacked)
+    lengths = jnp.full((B,), S, jnp.int32)
+    return logits, caches, lengths
+
+
+def decode_step(params, tokens, caches, lengths, cfg):
+    """One decode step. tokens: (B,1) int32; lengths: (B,) current positions.
+
+    Returns (logits (B,1,V), new_caches, lengths+1).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_tokens(params["embed"].astype(cdt), tokens, cfg.embed_scale)
+    pat = block_pattern(cfg, prefix_len=0)
+    pos = lengths
+
+    def body(carry, scanned):
+        h = carry
+        step_params, step_caches = scanned
+        new_caches = []
+        for i, spec in enumerate(pat.specs):
+            h, nc, _ = apply_block(step_params[i], h, positions=None, cfg=cfg,
+                                   spec=spec, cache=step_caches[i], pos=pos)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_head(params["lm_head"], x, cfg.final_softcap)
+    return logits, new_caches, lengths + 1

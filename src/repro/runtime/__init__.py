@@ -1,0 +1,6 @@
+"""Runtime substrates: telemetry, the Chronos StepGovernor, speculative host
+tasks, and elastic mesh recovery."""
+from .telemetry import Telemetry, DurationWindow
+from .governor import StepGovernor, GovernorConfig
+from .speculation import SpeculativeTaskRunner, ProgressBoard, TaskResult
+from . import elastic

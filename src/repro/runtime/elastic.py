@@ -1,0 +1,58 @@
+"""Elastic scaling: rebuild the mesh after node loss and reshard state.
+
+On a real cluster the coordinator detects failed hosts, re-runs
+make_production_mesh over the surviving slice, and restarts from the latest
+checkpoint with new shardings. The same logic runs here on CPU sub-meshes:
+`shrink_mesh` picks the largest (data', model') grid that fits the surviving
+devices (model axis preserved when possible — it carries TP layouts),
+and `reshard_state` device_puts a checkpointed pytree onto the new plan.
+
+Chronos connection: pod-loss is the extreme straggler. The governor treats a
+shrunken mesh as a cost change (fewer chips -> higher per-step price C),
+re-solving r* for the new configuration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..sharding.planner import make_plan, Plan
+
+
+@dataclass
+class ElasticEvent:
+    step: int
+    lost_devices: int
+    new_shape: tuple
+
+
+def shrink_mesh(devices, data: int, model: int, lost: int):
+    """Largest (data', model) mesh from the surviving devices.
+
+    Drops whole data-rows (the FSDP axis) first — TP groups stay intact, so
+    parameter layouts inside a model group survive and only the batch/FSDP
+    dimension reshards.
+    """
+    alive = np.asarray(devices).reshape(-1)[: data * model - lost]
+    data_new = len(alive) // model
+    if data_new < 1:
+        raise RuntimeError("not enough devices for one model group")
+    grid = alive[: data_new * model].reshape(data_new, model)
+    return Mesh(grid, ("data", "model"))
+
+
+def replan(cfg, mesh) -> Plan:
+    return make_plan(cfg, mesh)
+
+
+def reshard_state(state, old_plan: Plan, new_plan: Plan, params_meta):
+    """Move a state pytree onto the new mesh's shardings."""
+    new_shardings = new_plan.param_shardings(params_meta)
+
+    def move(x, sh):
+        return jax.device_put(np.asarray(x), sh)
+
+    return jax.tree.map(move, state, new_shardings)

@@ -1,0 +1,59 @@
+"""Task/step duration telemetry: the data the governor fits Pareto to."""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class DurationWindow:
+    """Thread-safe rolling window of observed durations (seconds)."""
+    capacity: int = 512
+    _buf: deque = field(default_factory=lambda: deque(maxlen=512))
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def record(self, seconds: float):
+        with self._lock:
+            self._buf.append(float(seconds))
+
+    def snapshot(self):
+        with self._lock:
+            return list(self._buf)
+
+    def __len__(self):
+        with self._lock:
+            return len(self._buf)
+
+
+class Telemetry:
+    """Named duration windows + counters for the whole runtime."""
+
+    def __init__(self):
+        self.windows: dict[str, DurationWindow] = {}
+        self.counters: dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def window(self, name: str) -> DurationWindow:
+        with self._lock:
+            if name not in self.windows:
+                self.windows[name] = DurationWindow()
+            return self.windows[name]
+
+    def bump(self, name: str, by: int = 1):
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + by
+
+    def timer(self, name: str):
+        tel = self
+
+        class _T:
+            def __enter__(self):
+                self.t0 = time.perf_counter()
+                return self
+
+            def __exit__(self, *exc):
+                tel.window(name).record(time.perf_counter() - self.t0)
+
+        return _T()

@@ -1,0 +1,4 @@
+"""Serving: prefill/decode engine + Chronos deadline-aware hedging."""
+from .engine import Engine
+from .scheduler import (HedgedScheduler, ReplicaPool, Request, HedgeOutcome,
+                        baseline_no_hedge)

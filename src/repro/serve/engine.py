@@ -1,0 +1,44 @@
+"""Serving engine: prefill + decode with KV cache over the model zoo."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_lib
+from ..models.param import values_of
+
+
+@dataclass
+class Engine:
+    model: object
+    params: object
+    max_seq: int
+
+    @classmethod
+    def build(cls, cfg, key=None, max_seq: int = 256, params=None):
+        m = model_lib.build(cfg)
+        if params is None:
+            params = values_of(m.init(
+                key if key is not None else jax.random.PRNGKey(0)))
+        eng = cls(model=m, params=params, max_seq=max_seq)
+        eng._prefill = jax.jit(lambda p, b: m.prefill(p, b, max_seq=max_seq))
+        eng._decode = jax.jit(m.decode_step)
+        return eng
+
+    def generate(self, batch: dict, n_tokens: int, progress_cb=None):
+        """Greedy decode n_tokens; progress_cb(i, n) per token (hedging)."""
+        logits, cache = self._prefill(self.params, batch)
+        V = self.model.cfg.vocab_size
+        toks = []
+        tok = jnp.argmax(logits[:, -1:, :V], axis=-1).astype(jnp.int32)
+        for i in range(n_tokens):
+            toks.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits[:, -1:, :V], axis=-1).astype(jnp.int32)
+            if progress_cb is not None:
+                progress_cb(i + 1, n_tokens)
+        return np.concatenate(toks, axis=1)

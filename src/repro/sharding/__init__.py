@@ -1,0 +1,2 @@
+"""Sharding planner: logical-axis rules with divisibility-aware fallbacks."""
+from .planner import Plan, make_plan, plan_context, constrain, current_plan

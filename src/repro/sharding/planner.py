@@ -1,0 +1,277 @@
+"""Sharding planner: logical-axis rules -> PartitionSpecs, per arch × mesh.
+
+The production mesh is fixed — (16,16)=("data","model") per pod, with a
+leading "pod" axis multi-pod — but real architectures do not always divide it
+(gemma2 has 8 q heads, deepseek/arctic 56, chatglm3 2 kv heads, ...), so the
+plan is built per arch with deterministic fallbacks:
+
+Parameters (storage; ZeRO-3-style — XLA all-gathers per layer under scan):
+  * logical rules: d_model->data, ffn/experts/vocab/heads/kv_heads/ssm_in/
+    ssm_heads->model (each only when the dim divides the axis),
+  * greedy FSDP completion: any tensor >= 2^16 elements with an unused mesh
+    axis gets its largest divisible unsharded dim sharded on that axis, so
+    every large tensor is 2D-sharded (keeps 33B-480B optimizer states within
+    per-chip HBM),
+  * tensors < 2^16 elements are replicated (norms, biases, scalars).
+
+Activations (constrained at block boundaries via `constrain`):
+  * batch -> ("pod","data") when divisible,
+  * heads/ffn/experts -> "model" when divisible; otherwise attention falls
+    back to context parallelism (seq -> "model") — Megatron-SP-style, GSPMD
+    inserts the gather/scatter transitions,
+  * decode KV caches: kv_heads -> "model" when divisible else cache seq ->
+    "model"; batch -> ("pod","data") when divisible else cache seq also takes
+    "data".
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.param import P as Pm, is_meta
+
+_SMALL = 1 << 16
+
+
+@dataclass
+class Plan:
+    mesh: Mesh
+    cfg: object
+    param_rules: dict
+    act_rules: dict
+    batch_axes: tuple
+    context_parallel_attn: bool
+    notes: list = field(default_factory=list)
+    fsdp_axes: tuple = ("data", "model")
+
+    # ----- parameters -----
+    def spec_for(self, meta: Pm) -> PartitionSpec:
+        shape = meta.value.shape
+        axes = meta.axes
+        assert len(shape) == len(axes), (shape, axes)
+        n = int(np.prod(shape)) if shape else 0
+        if n < _SMALL:
+            return PartitionSpec()
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used, spec = set(), []
+        for dim, ax in zip(shape, axes):
+            mesh_ax = self.param_rules.get(ax)
+            if mesh_ax is not None and mesh_ax not in used and \
+                    dim % sizes[mesh_ax] == 0:
+                spec.append(mesh_ax)
+                used.add(mesh_ax)
+            else:
+                spec.append(None)
+        # greedy FSDP completion over unused axes, largest dim first
+        for mesh_ax in self.fsdp_axes:
+            if mesh_ax in used or mesh_ax not in sizes:
+                continue
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if spec[i] is None and axes[i] != "layers" and \
+                        shape[i] % sizes[mesh_ax] == 0 and shape[i] > 1:
+                    spec[i] = mesh_ax
+                    used.add(mesh_ax)
+                    break
+        return PartitionSpec(*spec)
+
+    def param_specs(self, meta_tree):
+        return jax.tree.map(self.spec_for, meta_tree, is_leaf=is_meta)
+
+    def param_shardings(self, meta_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(meta_tree))
+
+    # ----- activations -----
+    def act_spec(self, logical: tuple) -> PartitionSpec:
+        """Resolve logical axes right-to-left so the innermost (TP) dimension
+        wins when two logical axes map to the same mesh axis — e.g. under
+        context-parallel attention ("seq"->model) the MLP hidden keeps
+        ffn->model and seq is gathered, exactly Megatron-SP's transition."""
+        used: set = set()
+        resolved = [None] * len(logical)
+        for i in range(len(logical) - 1, -1, -1):
+            ax = self.act_rules.get(logical[i])
+            flat = ax if isinstance(ax, tuple) else (ax,)
+            if ax is not None and not (set(flat) & used):
+                resolved[i] = ax
+                used.update(flat)
+        return PartitionSpec(*resolved)
+
+    def act_sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.act_spec(logical))
+
+    # ----- batches -----
+    def batch_spec(self, struct_tree):
+        """Shard dim0 (global batch) of every array over the batch axes."""
+        def spec(x):
+            if x.shape and x.shape[0] % self._batch_div() == 0:
+                return PartitionSpec(self.batch_axes)
+            return PartitionSpec()
+        return jax.tree.map(spec, struct_tree)
+
+    def _batch_div(self):
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return int(np.prod([sizes[a] for a in self.batch_axes]))
+
+    # ----- decode caches -----
+    def cache_spec_tree(self, cache_struct, batch_size: int):
+        """PartitionSpecs for a decode cache pytree.
+
+        Convention: kv caches are (..., batch, seq, kv_heads, head_dim);
+        ssm/conv states are (..., batch, *state_dims). We detect the batch
+        dim as the first dim equal to batch_size.
+        """
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        batch_ok = batch_size % self._batch_div() == 0
+        kv_ok = (self.cfg.n_kv_heads or 0) % sizes["model"] == 0
+
+        def spec(x):
+            shape = x.shape
+            if len(shape) == 1:  # lengths
+                return PartitionSpec(self.batch_axes if batch_ok else None)
+            spec_l = [None] * len(shape)
+            try:
+                b_i = next(i for i, d in enumerate(shape) if d == batch_size)
+            except StopIteration:
+                return PartitionSpec()
+            if batch_ok:
+                spec_l[b_i] = self.batch_axes
+            # kv cache heuristic: rank >= 4 with a seq dim right after batch
+            is_kv = len(shape) >= b_i + 4 and shape[b_i + 2] == self.cfg.n_kv_heads \
+                and shape[b_i + 3] == self.cfg.head_dim
+            if is_kv:
+                if kv_ok:
+                    spec_l[b_i + 2] = "model"
+                    if not batch_ok:
+                        spec_l[b_i + 1] = "data"
+                else:
+                    spec_l[b_i + 1] = ("data", "model") if not batch_ok \
+                        else "model"
+            else:
+                # state tensors: shard the largest divisible trailing dim
+                for i in range(len(shape) - 1, b_i, -1):
+                    if shape[i] % sizes["model"] == 0 and shape[i] >= sizes["model"]:
+                        spec_l[i] = "model"
+                        break
+            return PartitionSpec(*spec_l)
+
+        return jax.tree.map(spec, cache_struct)
+
+
+def make_plan(cfg, mesh: Mesh, opts: frozenset = frozenset()) -> Plan:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    notes = []
+
+    def div(n, label):
+        ok = n > 0 and n % model_n == 0
+        if not ok and n > 0:
+            notes.append(f"{label}={n} does not divide model axis {model_n}")
+        return ok
+
+    heads_ok = div(cfg.n_heads, "q_heads")
+    kv_ok = div(cfg.n_kv_heads, "kv_heads")
+    cp_attn = not heads_ok and cfg.family != "ssm" and cfg.n_heads > 0
+    if cp_attn:
+        notes.append("attention falls back to context parallelism (seq->model)")
+
+    d_inner = (cfg.ssm.expand * cfg.d_model) if cfg.ssm else 0
+    ssm_heads = (d_inner // cfg.ssm.head_dim) if cfg.ssm else 0
+
+    param_rules = {
+        "layers": None, "conv": None, "head_dim": None, "patch": None,
+        "ssm_bc": None, "ssm_state": None,
+        "d_model": "data",
+        "ffn": "model",
+        "e_ffn": None,               # experts take "model"; d_model takes "data"
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "vocab": "model",
+        "experts": "model",
+        "ssm_in": "model" if div(d_inner, "d_inner") else None,
+        "ssm_heads": "model" if div(ssm_heads, "ssm_heads") else None,
+    }
+    ep_data = "ep_data" in opts and cfg.moe is not None
+    if ep_data:
+        # Token-moving expert parallelism (§Perf lever): experts live on the
+        # data axis (an all-to-all routes tokens) and per-expert hidden takes
+        # TP over model — expert weights are never gathered.
+        param_rules["experts"] = "data"
+        param_rules["e_ffn"] = "model"
+
+    act_rules = {
+        "batch": batch_axes,
+        "seq": "model" if cp_attn else None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "ffn": "model",
+        "experts": "data" if ep_data else "model",
+        "vocab": "model",
+        "d_model": None,
+        "ssm_heads": "model" if div(ssm_heads, "") else None,
+        "ssm_in": "model" if div(d_inner, "") else None,
+        None: None,
+    }
+
+    fsdp_axes = ("data", "model")
+    if "pod_fsdp" in opts and "pod" in sizes:
+        # ZeRO-3 across pods too: halves per-chip parameter/optimizer state
+        # at the price of cross-DCN gathers — required to FIT 480B-class
+        # models; off by default (pods usually replicate).
+        fsdp_axes = ("pod",) + fsdp_axes
+        notes.append("pod_fsdp: parameter storage sharded across pods")
+    return Plan(mesh=mesh, cfg=cfg, param_rules=param_rules,
+                act_rules=act_rules, batch_axes=batch_axes,
+                context_parallel_attn=cp_attn, notes=notes,
+                fsdp_axes=fsdp_axes)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (models call `constrain` with logical axes)
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def plan_context(plan: Plan):
+    prev = getattr(_ctx, "plan", None)
+    _ctx.plan = plan
+    try:
+        with plan.mesh:
+            yield plan
+    finally:
+        _ctx.plan = prev
+
+
+def current_plan() -> Optional[Plan]:
+    return getattr(_ctx, "plan", None)
+
+
+def constrain(x, logical: tuple):
+    """with_sharding_constraint by logical axis names; no-op outside a plan.
+
+    Axes whose dim size does not divide the mesh extent are dropped (e.g.
+    batch=1 decode, seq=1)."""
+    plan = current_plan()
+    if plan is None:
+        return x
+    sizes = dict(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
+    spec = list(plan.act_spec(logical))
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        flat = ax if isinstance(ax, tuple) else (ax,)
+        div = int(np.prod([sizes[a] for a in flat]))
+        if x.shape[i] % div:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, PartitionSpec(*spec)))

@@ -1,0 +1,5 @@
+"""Trace-driven Monte-Carlo simulation of speculative execution strategies."""
+from .trace import JobSet, generate, uniform_jobset
+from .strategies import SimParams
+from .metrics import aggregate, net_utility, SimResult
+from .runner import run_strategy, run_all, jobspecs_of

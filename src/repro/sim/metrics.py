@@ -1,0 +1,34 @@
+"""Job-level metrics from per-task simulator outputs (segment reductions)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .trace import JobSet
+
+
+class SimResult(NamedTuple):
+    pocd: jnp.ndarray          # scalar — fraction of jobs meeting D
+    job_met: jnp.ndarray       # (J,) bool
+    job_completion: jnp.ndarray  # (J,)
+    job_cost: jnp.ndarray      # (J,) machine-time * C
+    mean_cost: jnp.ndarray     # scalar
+
+
+def aggregate(jobs: JobSet, completion, machine) -> SimResult:
+    job_completion = jax.ops.segment_max(completion, jobs.job_id, jobs.n_jobs)
+    job_machine = jax.ops.segment_sum(machine, jobs.job_id, jobs.n_jobs)
+    met = job_completion <= jobs.D
+    cost = job_machine * jobs.C
+    return SimResult(pocd=jnp.mean(met.astype(jnp.float32)),
+                     job_met=met, job_completion=job_completion,
+                     job_cost=cost, mean_cost=jnp.mean(cost))
+
+
+def net_utility(pocd, mean_cost, r_min, theta):
+    """Paper's evaluation utility on empirical quantities (Fig 2c/3c)."""
+    gap = jnp.maximum(pocd - r_min, 1e-9)
+    return jnp.where(pocd > r_min, jnp.log10(gap) - theta * mean_cost,
+                     -jnp.inf)

@@ -1,0 +1,107 @@
+"""End-to-end trace simulation: Chronos optimization + Monte-Carlo execution.
+
+For every job in the trace the Chronos optimizer picks r* (Algorithm 1,
+vectorized exact grid solve), then the strategy simulator executes the whole
+trace and empirical PoCD / cost / net utility are aggregated — the pipeline
+behind Figures 2-5 and Tables I-II.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.utility import JobSpec
+from ..core.optimizer import solve_batch
+from . import strategies as S
+from .metrics import aggregate, net_utility, SimResult
+from .trace import JobSet
+
+STRATEGY_SIMS = {
+    "clone": S.sim_clone,
+    "srestart": S.sim_srestart,
+    "sresume": S.sim_sresume,
+}
+BASELINE_SIMS = {
+    "hadoop_ns": S.sim_hadoop_ns,
+    "hadoop_s": S.sim_hadoop_s,
+    "mantri": S.sim_mantri,
+}
+
+
+class RunOutput(NamedTuple):
+    result: SimResult
+    r_opt: jnp.ndarray          # (J,) chosen r per job (0 for baselines)
+    utility: jnp.ndarray        # scalar net utility (empirical)
+    theory_pocd: jnp.ndarray    # (J,) closed-form PoCD at r_opt
+    theory_cost: jnp.ndarray    # (J,) closed-form E[T]*C at r_opt
+
+
+def jobspecs_of(jobs: JobSet, p: S.SimParams, theta, r_min=0.0) -> JobSpec:
+    t_min = jobs.t_min
+    tau_est = p.tau_est_frac * t_min
+    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
+    f = jnp.float32
+    J = jobs.n_jobs
+    return JobSpec(
+        t_min=f(t_min), beta=f(jobs.beta), D=f(jobs.D),
+        N=jobs.n_tasks.astype(jnp.float32),
+        tau_est=f(tau_est), tau_kill=f(tau_kill),
+        phi_est=jnp.full((J,), p.phi_est, jnp.float32),
+        C=f(jobs.C), theta=jnp.full((J,), theta, jnp.float32),
+        R_min=jnp.full((J,), r_min, jnp.float32))
+
+
+def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
+                 theta=1e-4, r_min=0.0, max_r: int = 8,
+                 oracle: bool = True, r_override=None) -> RunOutput:
+    if strategy in BASELINE_SIMS:
+        completion, machine = BASELINE_SIMS[strategy](key, jobs, p)
+        res = aggregate(jobs, completion, machine)
+        return RunOutput(result=res, r_opt=jnp.zeros((jobs.n_jobs,), jnp.int32),
+                         utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
+                         theory_pocd=jnp.zeros((jobs.n_jobs,)),
+                         theory_cost=jnp.zeros((jobs.n_jobs,)))
+
+    specs = jobspecs_of(jobs, p, theta, r_min)
+    if r_override is not None:
+        r_j = jnp.full((jobs.n_jobs,), r_override, jnp.int32)
+        from ..core.utility import pocd_of, cost_of
+        th_p = pocd_of(strategy, r_j.astype(jnp.float32), specs)
+        th_c = cost_of(strategy, r_j.astype(jnp.float32), specs) * specs.C
+    else:
+        r_j, _, th_p, th_c = solve_batch(strategy, specs, r_max=max_r + 1)
+        th_c = th_c * specs.C
+    r_task = r_j[jobs.job_id]
+    sim = STRATEGY_SIMS[strategy]
+    if strategy == "clone":
+        completion, machine = sim(key, jobs, r_task, p, max_r=max_r)
+    else:
+        completion, machine = sim(key, jobs, r_task, p, max_r=max_r,
+                                  oracle=oracle)
+    res = aggregate(jobs, completion, machine)
+    return RunOutput(result=res, r_opt=r_j,
+                     utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
+                     theory_pocd=th_p, theory_cost=th_c)
+
+
+def run_all(key, jobs: JobSet, p: S.SimParams, theta=1e-4,
+            strategies=("hadoop_ns", "hadoop_s", "mantri",
+                        "clone", "srestart", "sresume"),
+            r_min_from_ns: bool = True, max_r: int = 8):
+    """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper)."""
+    keys = jax.random.split(key, len(strategies))
+    outs = {}
+    r_min = 0.0
+    for k, name in zip(keys, strategies):
+        if name == "hadoop_ns":
+            outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=0.0)
+            if r_min_from_ns:
+                r_min = float(outs[name].result.pocd) - 1e-3
+    for k, name in zip(keys, strategies):
+        if name == "hadoop_ns":
+            continue
+        outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=r_min,
+                                  max_r=max_r)
+    return outs, r_min

@@ -1,0 +1,5 @@
+"""Distributed training: optimizers, microbatched train step with Chronos
+backup-shard aggregation, and the Trainer loop."""
+from .optimizer import AdamW, Adafactor, make_optimizer
+from .train_step import make_train_step, TrainState, cosine_schedule
+from .trainer import Trainer, TrainerConfig

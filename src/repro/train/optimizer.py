@@ -1,0 +1,173 @@
+"""Sharded-friendly optimizers: AdamW and Adafactor.
+
+Hand-rolled (no optax in the image), pytree-based, jit-friendly. State leaves
+mirror parameter shapes (AdamW) or factored row/col stats (Adafactor), so the
+planner's parameter PartitionSpecs apply to optimizer state directly
+(factored stats derive their spec by dropping the corresponding dim).
+
+AdamW keeps float32 master copies when params are lower precision (mixed
+precision policy); Adafactor runs factored+memory-lean for 480B-class models
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object
+    v: object
+    master: object          # float32 master params
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: object              # row stats (mean over last dim)
+    vc: object              # col stats (mean over second-to-last dim)
+    v: object               # full stats for <2D leaves (None otherwise)
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+class AdamW:
+    def __init__(self, lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+        self.lr, self.b1, self.b2, self.eps, self.wd = lr, b1, b2, eps, weight_decay
+
+    def init(self, params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros), master=_f32(params))
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        lr = self.lr * lr_scale
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g, g32, state.m)
+        v = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * g * g, g32, state.v)
+        master = jax.tree.map(
+            lambda m_, v_, ma: ma - lr * (m_ / bc1 / (jnp.sqrt(v_ / bc2)
+                                                      + self.eps) + self.wd * ma),
+            m, v, state.master)
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, AdamWState(step, m, v, master)
+
+    def state_spec_tree(self, param_specs):
+        """PartitionSpecs for the optimizer state given parameter specs."""
+        from jax.sharding import PartitionSpec
+        return AdamWState(step=PartitionSpec(), m=param_specs,
+                          v=param_specs, master=param_specs)
+
+
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), no momentum."""
+
+    def __init__(self, lr=1e-3, decay=0.8, eps=1e-30, clip=1.0,
+                 weight_decay=0.0, min_dim_size_to_factor=128):
+        self.lr, self.decay, self.eps, self.clip = lr, decay, eps, clip
+        self.wd = weight_decay
+        self.min_factor = min_dim_size_to_factor
+
+    def _factored(self, p):
+        return p.ndim >= 2 and p.shape[-1] >= self.min_factor and \
+            p.shape[-2] >= self.min_factor
+
+    def init(self, params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if self._factored(p) \
+                else jnp.zeros((), jnp.float32)
+
+        def vc(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if self._factored(p) else jnp.zeros((), jnp.float32)
+
+        def vfull(p):
+            return jnp.zeros((), jnp.float32) if self._factored(p) \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr, params),
+                              vc=jax.tree.map(vc, params),
+                              v=jax.tree.map(vfull, params))
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self.lr * lr_scale
+
+        def new_vr(g, p, vr):
+            if not self._factored(p):
+                return vr
+            g2 = g.astype(jnp.float32) ** 2 + self.eps
+            return beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+
+        def new_vc(g, p, vc):
+            if not self._factored(p):
+                return vc
+            g2 = g.astype(jnp.float32) ** 2 + self.eps
+            return beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+
+        def new_v(g, p, v):
+            if self._factored(p):
+                return v
+            g2 = g.astype(jnp.float32) ** 2 + self.eps
+            return beta * v + (1 - beta) * g2
+
+        vr = jax.tree.map(new_vr, grads, params, state.vr)
+        vc = jax.tree.map(new_vc, grads, params, state.vc)
+        v = jax.tree.map(new_v, grads, params, state.v)
+
+        def new_p(g, p, vr_, vc_, v_):
+            g = g.astype(jnp.float32)
+            if self._factored(p):
+                r_factor = vr_ / jnp.maximum(
+                    jnp.mean(vr_, axis=-1, keepdims=True), self.eps)
+                update = g / jnp.sqrt(r_factor[..., None] * vc_[..., None, :]
+                                      + self.eps)
+            else:
+                update = g / jnp.sqrt(v_ + self.eps)
+            rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+            update = update / jnp.maximum(1.0, rms / self.clip)
+            out = p.astype(jnp.float32) - lr * (update + self.wd *
+                                                p.astype(jnp.float32))
+            return out.astype(p.dtype)
+
+        new_params = jax.tree.map(new_p, grads, params, vr, vc, v)
+        return new_params, AdafactorState(step, vr, vc, v)
+
+    def state_spec_tree(self, param_specs, params_struct):
+        from jax.sharding import PartitionSpec
+
+        def vr_spec(spec, p):
+            return PartitionSpec(*spec[:-1]) if self._factored(p) \
+                else PartitionSpec()
+
+        def vc_spec(spec, p):
+            return PartitionSpec(*(spec[:-2] + spec[-1:])) \
+                if self._factored(p) else PartitionSpec()
+
+        def v_spec(spec, p):
+            return PartitionSpec() if self._factored(p) else spec
+
+        return AdafactorState(
+            step=PartitionSpec(),
+            vr=jax.tree.map(vr_spec, param_specs, params_struct),
+            vc=jax.tree.map(vc_spec, param_specs, params_struct),
+            v=jax.tree.map(v_spec, param_specs, params_struct))
+
+
+def make_optimizer(cfg, lr=1e-3, weight_decay=0.0):
+    if cfg.optimizer == "adafactor":
+        return Adafactor(lr=lr, weight_decay=weight_decay)
+    return AdamW(lr=lr, weight_decay=weight_decay)

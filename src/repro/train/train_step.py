@@ -1,0 +1,106 @@
+"""The distributed train step: microbatched gradient accumulation with
+Chronos backup-shard (Clone-strategy) masked aggregation.
+
+The global batch is split into `n_micro` microbatches scanned sequentially
+(bounds activation memory at 33B-480B scale). Each microbatch is a Chronos
+"task": the `shard_mask` input (n_micro,) carries the governor's decision of
+which shards' gradients count — dropped stragglers / failed backups get mask
+0 and the aggregation renormalizes, which is how the paper's Clone/kill-at-
+tau_kill semantics map onto SPMD collectives (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt_state: object
+    step: jax.Array
+
+
+def make_train_step(model, optimizer, n_micro: int, lr_schedule=None,
+                    opts: frozenset = frozenset(), grad_specs=None,
+                    mesh=None):
+    """Returns train_step(state, batch, shard_mask) -> (state, metrics).
+
+    opts (perf levers, see EXPERIMENTS.md §Perf):
+      "bf16_params"  — cast f32 params to bf16 once per step, before the
+                       microbatch scan, so ZeRO all-gathers move half the
+                       bytes (weights are consumed in bf16 anyway).
+      "shard_grads"  — constrain the grad-accumulation carry to the parameter
+                       shardings (forces reduce-scatter inside the scan
+                       instead of carrying replicated gradients).
+      "bf16_grads"   — accumulate gradients in bf16 (halves the accumulator
+                       footprint; acceptable over <=32 microbatches with the
+                       f32 optimizer math downstream — documented tradeoff).
+    """
+    cfg = model.cfg
+
+    def loss(params, mb):
+        return model.loss_fn(params, mb)
+
+    def train_step(state, batch, shard_mask):
+        params = state.params
+        if "bf16_params" in opts:
+            compute_params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        else:
+            compute_params = params
+
+        def to_micro(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        def shard_g(g):
+            if "shard_grads" in opts and grad_specs is not None:
+                from jax.sharding import NamedSharding
+                return jax.tree.map(
+                    lambda a, s: jax.lax.with_sharding_constraint(
+                        a, NamedSharding(mesh, s)), g, grad_specs)
+            return g
+
+        micro = jax.tree.map(to_micro, batch)
+        acc_dt = jnp.bfloat16 if "bf16_grads" in opts else jnp.float32
+        g_zero = shard_g(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt), compute_params))
+
+        def body(carry, inp):
+            g_acc, loss_acc = carry
+            mb, w = inp
+            (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(
+                compute_params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + (w * b.astype(jnp.float32)).astype(acc_dt),
+                g_acc, shard_g(g))
+            return (g_acc, loss_acc + w * l), None
+
+        (g_sum, loss_sum), _ = jax.lax.scan(
+            body, (g_zero, jnp.zeros((), jnp.float32)), (micro, shard_mask))
+        denom = jnp.maximum(jnp.sum(shard_mask), 1.0)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) / denom, g_sum)
+        mean_loss = loss_sum / denom
+
+        lr_scale = lr_schedule(state.step) if lr_schedule else 1.0
+        new_params, new_opt = optimizer.update(grads, state.opt_state, params,
+                                               lr_scale=lr_scale)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+        metrics = {"loss": mean_loss, "grad_norm": gnorm,
+                   "active_shards": jnp.sum(shard_mask)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def cosine_schedule(base=1.0, warmup=100, total=10_000, floor=0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / warmup, 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base * warm * cos
+    return fn

@@ -1,0 +1,123 @@
+"""The training loop: data pipeline + governor + checkpointing + failure
+handling, with the Chronos layer as a first-class feature.
+
+Per step:
+  1. the governor fits Pareto to shard telemetry and picks (strategy, r*),
+  2. the data pipeline's shard tasks run under the SpeculativeTaskRunner,
+  3. the jit'd train_step consumes the batch with the backup-shard mask
+     (failed/straggling gradient shards drop out of the masked aggregation),
+  4. every `ckpt_every` steps the async checkpointer commits atomically,
+  5. injected failures (tests) trigger restore-from-latest + pipeline seek.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import checkpoint as ckpt
+from ..data.pipeline import DataPipeline, PipelineConfig
+from ..models import model as model_lib
+from ..models.param import values_of
+from ..runtime.governor import StepGovernor, GovernorConfig
+from ..runtime.speculation import SpeculativeTaskRunner
+from ..runtime.telemetry import Telemetry
+from .optimizer import make_optimizer
+from .train_step import make_train_step, TrainState, cosine_schedule
+
+
+@dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    n_micro: int = 2
+    lr: float = 3e-3
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    step_deadline: float = 5.0      # governor deadline (seconds)
+    n_data_shards: int = 4
+    data_cycle: int = 0
+    speculative_input: bool = True
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, key=None):
+        self.arch_cfg = cfg
+        self.tcfg = tcfg
+        self.model = model_lib.build(cfg)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params = values_of(self.model.init(key))
+        self.optimizer = make_optimizer(cfg, lr=tcfg.lr)
+        opt_state = self.optimizer.init(params)
+        self.state = TrainState(params=params, opt_state=opt_state,
+                                step=jnp.zeros((), jnp.int32))
+        sched = cosine_schedule(base=1.0, warmup=10, total=tcfg.n_steps)
+        self._step_fn = jax.jit(make_train_step(self.model, self.optimizer,
+                                                tcfg.n_micro, sched))
+        self.telemetry = Telemetry()
+        self.governor = StepGovernor(
+            GovernorConfig(deadline=tcfg.step_deadline,
+                           n_tasks=tcfg.n_data_shards, theta=1e-3),
+            self.telemetry)
+        runner = SpeculativeTaskRunner() if tcfg.speculative_input else None
+        self.pipeline = DataPipeline(
+            PipelineConfig(vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+                           global_batch=tcfg.global_batch,
+                           n_shards=tcfg.n_data_shards,
+                           cycle=tcfg.data_cycle,
+                           family="dense"),
+            shard_runner=runner,
+            governor=self.governor if tcfg.speculative_input else None)
+        self.checkpointer = ckpt.AsyncCheckpointer(tcfg.ckpt_dir) \
+            if tcfg.ckpt_dir else None
+        self.history: list[dict] = []
+
+    def maybe_restore(self) -> int:
+        if not self.tcfg.ckpt_dir:
+            return 0
+        latest = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if latest is None:
+            return 0
+        self.state = ckpt.restore(self.tcfg.ckpt_dir, latest, self.state)
+        self.state = TrainState(self.state.params, self.state.opt_state,
+                                jnp.asarray(self.state.step))
+        # seek the data pipeline: exact resume = replay from the same step
+        self.pipeline.close()
+        self.pipeline = DataPipeline(self.pipeline.cfg, start_step=latest,
+                                     shard_runner=self.pipeline.shard_runner,
+                                     governor=self.pipeline.governor)
+        return int(latest)
+
+    def run(self, n_steps: Optional[int] = None, fail_at: Optional[int] = None):
+        n_steps = n_steps or self.tcfg.n_steps
+        start = int(self.state.step)
+        mask = jnp.ones((self.tcfg.n_micro,), jnp.float32)
+        for _ in range(start, n_steps):
+            t0 = time.perf_counter()
+            step, batch = next(self.pipeline)
+            jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if "frames" not in jbatch and "tokens" in jbatch:
+                jbatch = {"tokens": jbatch["tokens"], "labels": jbatch["labels"]}
+            self.state, metrics = self._step_fn(self.state, jbatch, mask)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.history.append({"step": step, "loss": loss, "time": dt})
+            if self.checkpointer and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.checkpointer.save(step + 1, self.state)
+            if fail_at is not None and step + 1 == fail_at:
+                if self.checkpointer:
+                    self.checkpointer.wait()
+                raise RuntimeError(f"injected failure at step {fail_at}")
+            if (step + 1) % self.tcfg.log_every == 0:
+                print(f"step {step+1:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms, shards={float(metrics['active_shards']):.0f})")
+        if self.checkpointer:
+            self.checkpointer.wait()
+        self.pipeline.close()
+        return self.history

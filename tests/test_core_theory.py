@@ -1,0 +1,127 @@
+"""Closed-form PoCD/cost (Thms 1-6) vs direct Monte-Carlo; Thm 7 orderings."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (JobSpec, pocd_clone, pocd_srestart, pocd_sresume,
+                        cost_clone, cost_srestart, cost_sresume, gamma,
+                        pocd_of, cost_of, theory)
+
+T_MIN, BETA, D, N = 10.0, 2.0, 50.0, 10
+TAU_EST, TAU_KILL, PHI = 3.0, 8.0, 0.4
+M = 200_000
+
+
+@pytest.fixture(scope="module")
+def samples():
+    rng = np.random.default_rng(0)
+    return T_MIN * rng.uniform(size=(M, N, 6)) ** (-1 / BETA)
+
+
+@pytest.mark.parametrize("r", [0, 1, 2, 3])
+def test_clone_matches_mc(samples, r):
+    att = samples[:, :, : r + 1]
+    best = att.min(-1)
+    poc_mc = (best <= D).all(-1).mean()
+    cost_mc = (r * TAU_KILL + best).sum(-1).mean()
+    assert float(pocd_clone(r, T_MIN, BETA, D, N)) == pytest.approx(poc_mc, abs=3e-3)
+    assert float(cost_clone(r, T_MIN, BETA, D, N, TAU_KILL)) == pytest.approx(
+        cost_mc, rel=2e-2)
+
+
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_srestart_matches_mc(samples, r):
+    T1 = samples[:, :, 0]
+    strag = T1 > D  # oracle detection, as in the theory
+    extras = samples[:, :, 1: r + 1]
+    task_done = np.where(strag, extras.min(-1) <= D - TAU_EST, True)
+    poc_mc = task_done.all(-1).mean()
+    w_all = np.minimum(T1 - TAU_EST, extras.min(-1))
+    cost_task = np.where(strag, TAU_EST + r * (TAU_KILL - TAU_EST) + w_all, T1)
+    cost_mc = cost_task.sum(-1).mean()
+    assert float(pocd_srestart(r, T_MIN, BETA, D, N, TAU_EST)) == pytest.approx(
+        poc_mc, abs=3e-3)
+    assert float(cost_srestart(r, T_MIN, BETA, D, N, TAU_EST, TAU_KILL)) == \
+        pytest.approx(cost_mc, rel=2e-2)
+
+
+@pytest.mark.parametrize("r", [0, 1, 2, 3])
+def test_sresume_matches_mc(samples, r):
+    T1 = samples[:, :, 0]
+    strag = T1 > D
+    # resumed attempts: startup floor t_min, remaining (1-phi) of the work
+    resumed = np.maximum(T_MIN, (1 - PHI) * samples[:, :, 1: r + 2])
+    w_new = resumed.min(-1)
+    task_done = np.where(strag, w_new <= D - TAU_EST, True)
+    poc_mc = task_done.all(-1).mean()
+    cost_task = np.where(strag, TAU_EST + r * (TAU_KILL - TAU_EST) + w_new, T1)
+    cost_mc = cost_task.sum(-1).mean()
+    assert float(pocd_sresume(r, T_MIN, BETA, D, N, TAU_EST, PHI)) == \
+        pytest.approx(poc_mc, abs=3e-3)
+    assert float(cost_sresume(r, T_MIN, BETA, D, N, TAU_EST, TAU_KILL, PHI)) == \
+        pytest.approx(cost_mc, rel=2e-2)
+
+
+def _job(**kw):
+    base = dict(t_min=T_MIN, beta=BETA, D=D, N=N, tau_est=TAU_EST,
+                tau_kill=TAU_KILL, phi_est=PHI)
+    base.update(kw)
+    return JobSpec.make(**base)
+
+
+@pytest.mark.parametrize("r", [1, 2, 4, 8])
+def test_theorem7_orderings(r):
+    job = _job()
+    assert bool(theory.clone_beats_srestart(job, r))
+    assert bool(theory.sresume_beats_srestart(job, r))
+    # direct comparison always agrees with the PoCD closed forms
+    direct = bool(theory.clone_beats_sresume(job, r))
+    rc = float(pocd_of("clone", r, job))
+    rs = float(pocd_of("sresume", r, job))
+    assert direct == (rc > rs) or abs(rc - rs) < 1e-6
+
+
+@pytest.mark.parametrize("r", [0, 1, 2, 4, 8, 16])
+def test_theorem7_clone_vs_resume_threshold(r):
+    """Thm 7(3) threshold, in the paper's straggler-consistent regime
+    (phi < tau_est/D so that (1-phi) D > D - tau_est)."""
+    job = _job(phi_est=0.02)
+    thr = float(theory.clone_vs_sresume_threshold(job))
+    direct = bool(theory.clone_beats_sresume(job, r))
+    if abs(r - thr) > 1e-6:
+        assert direct == (r > thr)
+
+
+@pytest.mark.parametrize("strategy", ["clone", "srestart", "sresume"])
+def test_pocd_monotone_in_r(strategy):
+    job = _job()
+    rs = jnp.arange(0.0, 16.0)
+    vals = np.asarray(pocd_of(strategy, rs, job))
+    assert (np.diff(vals) >= -1e-7).all()
+    assert (vals >= 0).all() and (vals <= 1).all()
+
+
+@pytest.mark.parametrize("strategy", ["clone", "srestart", "sresume"])
+def test_concavity_above_gamma(strategy):
+    """Thm 8: R(r) concave (2nd difference <= 0) for r > Gamma."""
+    job = _job(N=1000)  # larger N pushes Gamma above 0 so the bound is active
+    g = float(gamma(strategy, job))
+    rs = np.arange(max(np.ceil(g), 0), max(np.ceil(g), 0) + 20, 1.0)
+    vals = np.asarray(pocd_of(strategy, jnp.asarray(rs, jnp.float32), job))
+    d2 = vals[2:] - 2 * vals[1:-1] + vals[:-2]
+    assert (d2 <= 1e-6).all()
+
+
+def test_deadline_insensitive_jobs_need_no_speculation():
+    """Paper Sec V: as D -> inf speculation stops paying off. For Clone the
+    optimum is exactly r = 0 (clones have up-front cost); for the reactive
+    strategies the straggler probability ~ (t_min/D)^beta -> 0 makes the
+    whole r-axis flat, so we assert the utility gain over r = 0 is nil."""
+    from repro.core import solve_grid, utility
+    import jax.numpy as jnp
+    job = _job(D=1e5, theta=1e-3)
+    assert solve_grid("clone", job).r_opt == 0
+    for s in ("srestart", "sresume"):
+        sol = solve_grid(s, job)
+        u0 = float(utility(s, jnp.float32(0.0), job))
+        assert sol.utility - u0 < 1e-3

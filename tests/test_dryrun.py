@@ -1,0 +1,78 @@
+"""Dry-run machinery: HLO analyzer correctness on known programs and a
+single real production-mesh cell compiled in a subprocess (512 host devices)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analyzer import analyze
+
+
+def test_analyzer_counts_scan_trip_counts():
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jnp.ones((128, 128), jnp.bfloat16)
+    ws = jnp.ones((10, 128, 128), jnp.bfloat16)
+    txt = jax.jit(scanned).lower(x, ws).compile().as_text()
+    a = analyze(txt)
+    assert a["dot_flops"] == pytest.approx(2 * 128 ** 3 * 10, rel=1e-6)
+
+
+def test_analyzer_counts_nested_scans():
+    def nested(x, ws):
+        def outer(c, _):
+            def inner(c2, w):
+                return jnp.tanh(c2 @ w), None
+            c, _ = jax.lax.scan(inner, c, ws)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    x = jnp.ones((128, 128), jnp.bfloat16)
+    ws = jnp.ones((13, 128, 128), jnp.bfloat16)
+    txt = jax.jit(nested).lower(x, ws).compile().as_text()
+    a = analyze(txt)
+    assert a["dot_flops"] == pytest.approx(2 * 128 ** 3 * 13 * 4, rel=1e-6)
+
+
+def test_analyzer_dus_is_inplace():
+    """KV-cache-style dynamic updates must not count the full cache."""
+    def update(cache, x, i):
+        return jax.lax.dynamic_update_slice(cache, x, (i, 0))
+
+    cache = jnp.zeros((4096, 512), jnp.bfloat16)
+    x = jnp.ones((1, 512), jnp.bfloat16)
+    txt = jax.jit(update).lower(cache, x, jnp.int32(7)).compile().as_text()
+    a = analyze(txt)
+    cache_bytes = 4096 * 512 * 2
+    assert a["hbm_bytes"] < cache_bytes / 4, a["hbm_bytes"]
+
+
+def test_shape_applicability_grid():
+    from repro.configs import ALL_ARCHS, SHAPES, shape_applicable
+    live = sum(shape_applicable(a, s)[0] for a in ALL_ARCHS for s in SHAPES)
+    assert live == 31  # 40 cells - 9 documented skips
+
+
+@pytest.mark.slow
+def test_one_production_cell_compiles(tmp_path):
+    """End-to-end dry-run for one cell on the real 512-device multi-pod mesh
+    (subprocess so the host-device flag cannot leak into this process)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "gemma2-2b",
+         "--shape", "decode_32k", "--mesh", "multi", "--out", str(tmp_path)],
+        capture_output=True, text=True, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.loads((tmp_path / "gemma2-2b__decode_32k__multi.json").read_text())
+    assert rec["n_devices"] == 512
+    assert rec["flops_per_device"] > 0
+    assert rec["memory"]["argument_bytes"] < 16 * 2 ** 30  # fits v5e HBM

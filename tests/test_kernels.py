@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/mode sweeps (interpret
+mode on CPU per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mc_inputs(J=256, N=16, R=6, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    u = jax.random.uniform(ks[0], (J, N, R), minval=1e-6, maxval=1.0)
+    t_min = jax.random.uniform(ks[1], (J,), minval=5.0, maxval=20.0)
+    beta = jax.random.uniform(ks[2], (J,), minval=1.2, maxval=3.0)
+    D = jax.random.uniform(ks[3], (J,), minval=40.0, maxval=120.0)
+    r = jax.random.randint(ks[4], (J,), 0, R - 1)
+    return u, t_min, beta, D, r
+
+
+@pytest.mark.parametrize("mode", ["clone", "srestart", "sresume"])
+@pytest.mark.parametrize("shape", [(256, 16, 6), (128, 64, 4), (384, 8, 8)])
+def test_pocd_mc_matches_ref(mode, shape):
+    J, N, R = shape
+    u, t_min, beta, D, r = _mc_inputs(J, N, R, seed=J + R)
+    met_k, cost_k = ops.pocd_mc(u, t_min, beta, D, r, mode=mode)
+    met_r, cost_r = ref.pocd_mc_ref(u, t_min, beta, D, r, mode=mode)
+    np.testing.assert_allclose(np.asarray(met_k), np.asarray(met_r),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cost_k), np.asarray(cost_r),
+                               rtol=2e-5)
+
+
+def test_pocd_mc_padding_path():
+    u, t_min, beta, D, r = _mc_inputs(J=200, N=8, R=4)  # not a tile multiple
+    met_k, cost_k = ops.pocd_mc(u, t_min, beta, D, r, mode="clone")
+    met_r, cost_r = ref.pocd_mc_ref(u, t_min, beta, D, r, mode="clone")
+    np.testing.assert_allclose(np.asarray(cost_k), np.asarray(cost_r),
+                               rtol=2e-5)
+    assert met_k.shape == (200,)
+
+
+def test_pocd_mc_matches_closed_form():
+    """Kernel MC estimate converges to Theorem 1."""
+    from repro.core import pocd_clone
+    J, N, R = 4096, 10, 4
+    u = jax.random.uniform(KEY, (J, N, R), minval=1e-7, maxval=1.0)
+    ones = jnp.ones((J,))
+    met, _ = ops.pocd_mc(u, 10.0 * ones, 2.0 * ones, 50.0 * ones,
+                         jnp.full((J,), 1, jnp.int32), mode="clone")
+    assert float(jnp.mean(met)) == pytest.approx(
+        float(pocd_clone(1, 10.0, 2.0, 50.0, N)), abs=0.02)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bhsd", [
+    (1, 4, 256, 64),    # MHA
+    (2, 8, 256, 128),   # GQA handled below by kv heads
+])
+def test_flash_attention_mha(dtype, bhsd):
+    B, H, S, D = bhsd
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, D), dtype)
+    out = ops.attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("kv_heads", [1, 2, 4])
+def test_flash_attention_gqa(kv_heads):
+    B, H, S, D = 1, 8, 256, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, kv_heads, S, D))
+    v = jax.random.normal(ks[2], (B, kv_heads, S, D))
+    out = ops.attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_softcap_and_noncausal():
+    B, H, S, D = 1, 2, 256, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    for causal, cap in [(False, None), (True, 50.0), (False, 30.0)]:
+        out = ops.attention(q, k, v, causal=causal, softcap=cap)
+        exp = ref.attention_ref(q, k, v, causal=causal, softcap=cap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_block_shapes():
+    """Block size must not change the result (tiling correctness)."""
+    B, H, S, D = 1, 2, 512, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    o1 = ops.attention(q, k, v, block_q=128, block_k=128)
+    o2 = ops.attention(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,58 @@
+"""Multi-wave executions (the paper's stated future work) vs Monte-Carlo."""
+import numpy as np
+import pytest
+
+from repro.core import JobSpec
+from repro.core.multiwave import (multiwave_pocd, multiwave_cost,
+                                  solve_multiwave, wave_cdf)
+
+T_MIN, BETA, D = 10.0, 2.0, 120.0
+
+
+def _mc_pocd(r, N, n_slots, D, n_jobs=120_000, seed=0):
+    rng = np.random.default_rng(seed)
+    waves = [n_slots] * (N // n_slots) + ([N % n_slots] if N % n_slots else [])
+    total = np.zeros(n_jobs)
+    for m in waves:
+        att = T_MIN * rng.uniform(size=(n_jobs, m, r + 1)) ** (-1 / (BETA))
+        total += att.min(axis=2).max(axis=1)
+    return float((total <= D).mean())
+
+
+@pytest.mark.parametrize("r,N,slots", [(0, 20, 10), (1, 20, 10),
+                                       (2, 30, 10), (1, 25, 10)])
+def test_multiwave_pocd_matches_mc(r, N, slots):
+    th = multiwave_pocd(r, T_MIN, BETA, D, N, slots)
+    mc = _mc_pocd(r, N, slots, D)
+    assert th == pytest.approx(mc, abs=8e-3), (r, N, slots)
+
+
+def test_single_wave_reduces_to_theorem1():
+    from repro.core import pocd_clone
+    # N <= slots: one wave — must equal the paper's closed form
+    th = multiwave_pocd(1, T_MIN, BETA, 50.0, 10, 16)
+    paper = float(pocd_clone(1, T_MIN, BETA, 50.0, 10))
+    assert th == pytest.approx(paper, abs=2e-3)
+
+
+def test_wave_cdf_is_distribution():
+    ts = np.linspace(0, 500, 1000)
+    c = wave_cdf(ts, T_MIN, BETA, 1, 10)
+    assert (np.diff(c) >= -1e-12).all()
+    assert c[0] == 0.0 and c[-1] == pytest.approx(1.0, abs=1e-3)
+
+
+def test_more_waves_need_more_speculation():
+    """Splitting the same job into more waves tightens each wave's budget, so
+    the optimal r weakly increases — the qualitative answer to the paper's
+    future-work question."""
+    job = JobSpec.make(t_min=T_MIN, beta=BETA, D=150.0, N=40, tau_est=3.0,
+                       tau_kill=8.0, theta=1e-4)
+    r_wide, _ = solve_multiwave(job, n_slots=40)   # single wave
+    r_narrow, _ = solve_multiwave(job, n_slots=10)  # four waves
+    assert r_narrow >= r_wide
+
+
+def test_cost_is_wave_independent():
+    assert multiwave_cost(2, T_MIN, BETA, 30, 8.0) == \
+        pytest.approx(30 * (2 * 8.0 + T_MIN * 6 / 5), rel=1e-6)

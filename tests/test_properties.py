@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (JobSpec, pocd_of, cost_of, utility, solve_grid,
+                        gamma, theory, handoff_offset)
+from repro.core.pareto import sf, cdf, mean, min_of_n_mean
+
+# bounded, physically meaningful parameter space
+job_params = st.fixed_dictionaries({
+    "t_min": st.floats(1.0, 50.0),
+    "beta": st.floats(1.1, 5.0),
+    "d_ratio": st.floats(1.5, 20.0),       # D = d_ratio * t_min
+    "N": st.integers(1, 2000),
+    "tau_frac": st.floats(0.05, 0.8),      # tau_est = frac * t_min
+    "phi": st.floats(0.0, 0.9),
+    "theta": st.floats(1e-6, 1e-2),
+})
+
+
+def _job(p):
+    t_min = p["t_min"]
+    return JobSpec.make(
+        t_min=t_min, beta=p["beta"], D=p["d_ratio"] * t_min, N=p["N"],
+        tau_est=p["tau_frac"] * t_min,
+        tau_kill=(p["tau_frac"] + 0.5) * t_min,
+        phi_est=p["phi"], C=1.0, theta=p["theta"], R_min=0.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(job_params, st.integers(0, 12))
+def test_pocd_is_probability_and_monotone(p, r):
+    job = _job(p)
+    for s in ("clone", "srestart", "sresume"):
+        v0 = float(pocd_of(s, r, job))
+        v1 = float(pocd_of(s, r + 1, job))
+        assert 0.0 <= v0 <= 1.0
+        assert v1 >= v0 - 1e-7, (s, p, r)
+
+
+@settings(max_examples=60, deadline=None)
+@given(job_params, st.integers(0, 10))
+def test_cost_bounds_in_r(p, r):
+    """Clone cost is NOT always monotone in r (a genuine property of Thm 2:
+    an extra clone bills tau_kill but cuts the winner's E[min] — for small
+    tau_kill and heavy tails the race is cheaper than flying solo). The
+    provable bound: the decrease is at most the E[min] drop, itself bounded
+    by t_min/(beta-1); and cost >= N * t_min always."""
+    job = _job(p)
+    c0 = float(cost_of("clone", r, job))
+    c1 = float(cost_of("clone", r + 1, job))
+    t_min, beta, N = float(job.t_min), float(job.beta), float(job.N)
+    assert c0 >= N * t_min - 1e-3
+    assert c1 >= c0 + N * (float(job.tau_kill) - t_min / (beta - 1.0)) - 1e-2
+    for s in ("srestart", "sresume"):
+        assert float(cost_of(s, r, job)) >= N * t_min * 0.5
+
+
+@settings(max_examples=40, deadline=None)
+@given(job_params)
+def test_theorem7_holds_everywhere(p):
+    job = _job(p)
+    r = 2
+    assert bool(theory.clone_beats_srestart(job, r))
+    # Thm 7(2) requires D - tau >= (1-phi) t_min, true in our param space
+    assert bool(theory.sresume_beats_srestart(job, r))
+
+
+@settings(max_examples=30, deadline=None)
+@given(job_params)
+def test_grid_solution_is_argmax(p):
+    job = _job(p)
+    for s in ("clone", "sresume"):
+        sol = solve_grid(s, job, r_max=40)
+        us = np.asarray(utility(s, jnp.arange(40, dtype=jnp.float32), job))
+        finite = np.where(np.isfinite(us), us, -np.inf)
+        assert sol.utility == pytest.approx(float(np.max(finite)), abs=1e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(1.0, 100.0), st.floats(1.05, 8.0), st.integers(1, 64))
+def test_pareto_min_distribution(t_min, beta, n):
+    """min of n Pareto(t_min, beta) is Pareto(t_min, n*beta) — Lemma 1."""
+    t = 2.5 * t_min
+    tail_min = float(sf(t, t_min, beta)) ** n
+    tail_direct = float(sf(t, t_min, n * beta))
+    assert tail_min == pytest.approx(tail_direct, rel=1e-4)
+    if n * beta > 1.01:
+        m = float(min_of_n_mean(t_min, beta, n))
+        assert t_min < m <= t_min * beta * n / (beta * n - 1) + 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0.0, 1e3), st.floats(1.0, 100.0), st.floats(5.0, 50.0),
+       st.floats(0.1, 4.9), st.floats(0.0, 0.09))
+def test_handoff_offset_monotone(b_start, b_est, tau, t_fp_frac, lau):
+    """Eq. 31: the resumed offset always skips at least the observed bytes
+    and grows with measured startup overhead."""
+    t_fp = lau + t_fp_frac
+    off = float(handoff_offset(b_start, b_est, tau, t_fp, lau))
+    assert off >= b_start + b_est - 1e-4
+    off2 = float(handoff_offset(b_start, b_est, tau, t_fp + 0.5, lau))
+    assert off2 >= off - 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.floats(1.2, 3.0))
+def test_kernel_oracle_invariants(n_tasks, r_max, beta):
+    """pocd_mc ref: met is monotone in deadline; cost >= N * t_min."""
+    from repro.kernels.ref import pocd_mc_ref
+    J, R = 64, r_max + 1
+    u = jax.random.uniform(jax.random.PRNGKey(int(beta * 100)),
+                           (J, n_tasks, R), minval=1e-6, maxval=1.0)
+    ones = jnp.ones((J,))
+    r = jnp.full((J,), r_max, jnp.int32)
+    met_lo, cost = pocd_mc_ref(u, 10 * ones, beta * ones, 30 * ones, r)
+    met_hi, _ = pocd_mc_ref(u, 10 * ones, beta * ones, 300 * ones, r)
+    assert (np.asarray(met_hi) >= np.asarray(met_lo) - 1e-6).all()
+    assert (np.asarray(cost) >= n_tasks * 10.0 - 1e-3).all()

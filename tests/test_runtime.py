@@ -1,0 +1,211 @@
+"""Runtime substrates: speculation, governor, checkpoint, pipeline, elastic."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (SpeculativeTaskRunner, StepGovernor,
+                           GovernorConfig, Telemetry)
+from repro.runtime import elastic
+from repro.ckpt import checkpoint as ckpt
+from repro.data import DataPipeline, PipelineConfig, make_shard, assemble
+
+
+# ---------------------------------------------------------------------------
+# SpeculativeTaskRunner
+# ---------------------------------------------------------------------------
+
+
+def _make_task(durations, work_units=20):
+    """Task that sleeps duration[idx] in work_units increments, reporting
+    progress; a resumed attempt skips already-done units."""
+    def task(idx, board, resume_from):
+        total = durations[idx]
+        done = int(resume_from)
+        for u in range(done, work_units):
+            if board.cancelled:
+                return None
+            time.sleep(total / work_units)
+            board.report((u + 1) / work_units, offset=float(u + 1))
+        return ("ok", idx)
+    return task
+
+
+def test_clone_strategy_races_attempts():
+    rng = np.random.default_rng(0)
+    durations = [0.05] * 6
+    runner = SpeculativeTaskRunner(max_workers=24)
+    res = runner.run(_make_task(durations), 6, strategy="clone", r=1,
+                     deadline=5.0, tau_est=0.1, tau_kill=0.3)
+    assert all(r.value == ("ok", r.index) for r in res)
+    assert all(r.attempts >= 1 for r in res)
+
+
+def test_srestart_speculates_on_straggler():
+    durations = [0.02, 0.02, 2.0, 0.02]   # task 2 is a straggler
+    runner = SpeculativeTaskRunner(max_workers=16)
+    t0 = time.monotonic()
+    res = runner.run(_make_task(durations), 4, strategy="srestart", r=1,
+                     deadline=1.0, tau_est=0.15, tau_kill=0.5)
+    wall = time.monotonic() - t0
+    assert all(r.value == ("ok", r.index) for r in res)
+    # without speculation the straggler alone takes 2s; restart still reruns
+    # from scratch (~2s) so only assert completion + speculation flag
+    assert res[2].speculated
+
+
+def test_sresume_work_preserving_beats_restart():
+    durations = [0.02, 1.2, 0.02, 0.02]
+    runner = SpeculativeTaskRunner(max_workers=16)
+    t0 = time.monotonic()
+    res = runner.run(_make_task(durations), 4, strategy="sresume", r=1,
+                     deadline=0.6, tau_est=0.3, tau_kill=0.45)
+    wall = time.monotonic() - t0
+    assert all(r.value == ("ok", r.index) for r in res)
+    assert res[1].speculated
+    # resume carried over ~tau_est/1.2 of the work: total < full restart time
+    assert wall < 0.3 + 1.2
+
+
+def test_failed_task_is_relaunched():
+    calls = {"n": 0}
+
+    def flaky(idx, board, resume_from):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("boom")
+        board.report(1.0)
+        return "recovered"
+
+    runner = SpeculativeTaskRunner(max_workers=4)
+    res = runner.run(flaky, 1, strategy="srestart", r=0, deadline=10.0,
+                     tau_est=0.05, tau_kill=0.1)
+    assert res[0].value == "recovered"
+    assert calls["n"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# StepGovernor
+# ---------------------------------------------------------------------------
+
+
+def test_governor_fits_and_decides():
+    rng = np.random.default_rng(1)
+    gov = StepGovernor(GovernorConfig(deadline=30.0, n_tasks=16, theta=1e-3))
+    for x in 5.0 * rng.uniform(size=256) ** (-1 / 2.0):
+        gov.observe(x)
+    t_min, beta = gov.fit()
+    assert t_min == pytest.approx(5.0, rel=0.05)
+    assert beta == pytest.approx(2.0, rel=0.15)
+    sol = gov.decide()
+    assert sol.strategy in ("clone", "srestart", "sresume")
+    assert 0 <= sol.r_opt <= 8
+    assert sol.pocd > 0.5
+
+
+def test_governor_cold_start_defaults():
+    gov = StepGovernor(GovernorConfig(deadline=10.0, n_tasks=4))
+    sol = gov.decide()
+    assert sol.r_opt == 0
+
+
+def test_governor_backup_mask():
+    gov = StepGovernor(GovernorConfig(deadline=10.0, n_tasks=4))
+    mask = gov.backup_mask(8, 2, failed={3, 7})
+    assert mask.sum() == 6
+    assert mask[3] == 0 and mask[7] == 0
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+    ckpt.save(tmp_path, 7, tree)
+    assert ckpt.latest_step(tmp_path) == 7
+    out = ckpt.restore(tmp_path, 7, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"][0].dtype == np.asarray(tree["b"][0]).dtype
+
+
+def test_checkpoint_ignores_torn_writes(tmp_path):
+    tree = {"x": jnp.ones((3,))}
+    ckpt.save(tmp_path, 1, tree)
+    # simulate a crash mid-write at step 2
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_checkpoint_gc(tmp_path):
+    tree = {"x": jnp.ones((2,))}
+    for s in range(5):
+        ckpt.save(tmp_path, s, tree)
+    ckpt.gc_old(tmp_path, keep=2)
+    assert ckpt.latest_step(tmp_path) == 4
+    assert ckpt.restore(tmp_path, 4, tree) is not None
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert len(steps) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    c = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    tree = {"w": jnp.full((8,), 3.0)}
+    c.save(3, tree)
+    c.wait()
+    out = ckpt.restore(tmp_path, 3, tree)
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_determinism_and_resume():
+    cfg = PipelineConfig(vocab_size=100, seq_len=8, global_batch=8, n_shards=2)
+    p1 = DataPipeline(cfg)
+    batches1 = [next(p1) for _ in range(4)]
+    p1.close()
+    # resume from step 2 reproduces the same stream
+    p2 = DataPipeline(cfg, start_step=2)
+    s, b = next(p2)
+    p2.close()
+    assert s == 2
+    np.testing.assert_array_equal(b["tokens"], batches1[2][1]["tokens"])
+
+
+def test_pipeline_shards_differ():
+    cfg = PipelineConfig(vocab_size=100, seq_len=8, global_batch=8, n_shards=2)
+    a = make_shard(cfg, 0, 0)
+    b = make_shard(cfg, 0, 1)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_host_sharding():
+    cfg = PipelineConfig(vocab_size=50, seq_len=4, global_batch=8,
+                         n_shards=2, n_hosts=2, host_rank=1)
+    shards = [make_shard(cfg, 0, s) for s in range(2)]
+    mine = assemble(cfg, shards)
+    assert mine["tokens"].shape[0] == 4      # half the global batch
+    cfg0 = cfg.__class__(**{**cfg.__dict__, "host_rank": 0})
+    other = assemble(cfg0, shards)
+    assert not np.array_equal(mine["tokens"], other["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Elastic
+# ---------------------------------------------------------------------------
+
+
+def test_shrink_mesh_preserves_model_axis():
+    devs = np.arange(8)   # pretend 4x2 mesh
+    mesh = elastic.shrink_mesh(np.array(jax.devices() * 8)[:8].reshape(4, 2),
+                               data=4, model=2, lost=2)
+    assert mesh.devices.shape == (3, 2)
+    assert mesh.axis_names == ("data", "model")

@@ -1,0 +1,92 @@
+"""Trace simulator: theory match, strategy orderings, baseline sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sim import (generate, uniform_jobset, SimParams, run_all,
+                       run_strategy)
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def uniform_jobs():
+    return uniform_jobset(4000, 10, t_min=10.0, beta=2.0, D=50.0)
+
+
+@pytest.mark.parametrize("strategy", ["clone", "srestart", "sresume"])
+def test_sim_matches_theory(uniform_jobs, strategy):
+    """Empirical PoCD and mean cost match Thms 1-6 at the optimizer's r*."""
+    out = run_strategy(KEY, uniform_jobs, strategy, P, theta=1e-3, max_r=8)
+    assert float(out.result.pocd) == pytest.approx(
+        float(out.theory_pocd[0]), abs=0.01)
+    assert float(out.result.mean_cost) == pytest.approx(
+        float(out.theory_cost[0]), rel=0.03)
+
+
+@pytest.mark.parametrize("r", [0, 1, 2, 4])
+def test_sim_matches_theory_fixed_r(uniform_jobs, r):
+    # MC noise at 4000 jobs: sigma(PoCD) ~ 0.0075 -> 3.3 sigma tolerance
+    for strategy in ("clone", "srestart", "sresume"):
+        out = run_strategy(KEY, uniform_jobs, strategy, P, theta=1e-3,
+                           max_r=8, r_override=r)
+        assert float(out.result.pocd) == pytest.approx(
+            float(out.theory_pocd[0]), abs=0.025), (strategy, r)
+        assert float(out.result.mean_cost) == pytest.approx(
+            float(out.theory_cost[0]), rel=0.03), (strategy, r)
+
+
+@pytest.fixture(scope="module")
+def trace_outputs():
+    jobs = generate(n_jobs=800, seed=1)
+    return run_all(KEY, jobs, P, theta=1e-4)
+
+
+def test_strategy_orderings_on_trace(trace_outputs):
+    """Paper Fig 2/3: chronos strategies beat baselines; S-Resume does best."""
+    outs, r_min = trace_outputs
+    pocd = {k: float(v.result.pocd) for k, v in outs.items()}
+    util = {k: float(v.utility) for k, v in outs.items()}
+    assert pocd["sresume"] > pocd["hadoop_s"] > pocd["hadoop_ns"]
+    assert pocd["srestart"] > pocd["hadoop_ns"]
+    assert pocd["clone"] > pocd["hadoop_ns"]
+    # Thm 7(2): S-Resume >= S-Restart
+    assert pocd["sresume"] >= pocd["srestart"] - 0.01
+    # net utility: chronos strategies beat all baselines (Fig 3c)
+    best_chronos = max(util["clone"], util["srestart"], util["sresume"])
+    assert best_chronos > util["mantri"]
+    assert best_chronos > util["hadoop_s"]
+    assert util["sresume"] >= util["srestart"] - 1e-6
+
+
+def test_mantri_beats_hadoop_pocd(trace_outputs):
+    outs, _ = trace_outputs
+    assert float(outs["mantri"].result.pocd) >= \
+        float(outs["hadoop_s"].result.pocd) - 0.02
+
+
+def test_theta_tradeoff():
+    """Fig 3: larger theta -> fewer attempts -> lower PoCD and lower cost."""
+    jobs = generate(n_jobs=500, seed=2)
+    lo = run_strategy(KEY, jobs, "sresume", P, theta=1e-5, max_r=8)
+    hi = run_strategy(KEY, jobs, "sresume", P, theta=3e-3, max_r=8)
+    assert float(jnp.mean(lo.r_opt)) >= float(jnp.mean(hi.r_opt))
+    assert float(lo.result.pocd) >= float(hi.result.pocd) - 0.01
+    assert float(lo.result.mean_cost) >= float(hi.result.mean_cost) - 1.0
+
+
+def test_beta_effect():
+    """Fig 4: heavier tails (smaller beta) -> costlier jobs."""
+    jobs_heavy = generate(n_jobs=400, seed=3, beta_range=(1.15, 1.25))
+    jobs_light = generate(n_jobs=400, seed=3, beta_range=(1.8, 1.9))
+    out_h = run_strategy(KEY, jobs_heavy, "sresume", P, theta=1e-4)
+    out_l = run_strategy(KEY, jobs_light, "sresume", P, theta=1e-4)
+    assert float(out_h.result.mean_cost) > float(out_l.result.mean_cost)
+
+
+def test_estimator_mode_close_to_oracle(uniform_jobs):
+    o = run_strategy(KEY, uniform_jobs, "sresume", P, theta=1e-3, oracle=True)
+    e = run_strategy(KEY, uniform_jobs, "sresume", P, theta=1e-3, oracle=False)
+    assert float(e.result.pocd) == pytest.approx(float(o.result.pocd), abs=0.05)
