@@ -1,0 +1,78 @@
+"""Cluster-engine throughput: dispatch events/sec vs slot-pool size.
+
+Times the capacity replay (the two-level slot-pool lax.scan, pass 1 + the
+combined relaxation pass) on a generated trace, per strategy and slot count.
+The scan cost is O(events * (sqrt(K) + K/sqrt(K))), so events/sec should
+degrade gently as slots grow — this benchmark is the regression guard for
+that property.
+
+Run:  PYTHONPATH=src python benchmarks/cluster_bench.py [--jobs 300]
+          [--slots 100,500,2000,8000] [--strategies clone,sresume,hadoop_s]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim import generate, SimParams
+from repro.sim.runner import jobspecs_of
+from repro.core.optimizer import solve_batch
+from repro.cluster.engine import BUILDERS, BASELINE_BUILDERS, replay
+from repro.cluster.slots import utilization
+
+
+def bench(jobs, strategy, slots, p, key, theta=1e-4, max_r=8, iters=3):
+    if strategy in BASELINE_BUILDERS:
+        table, race = BASELINE_BUILDERS[strategy](key, jobs, p)
+    else:
+        specs = jobspecs_of(jobs, p, theta, 0.0)
+        r_j, _, _, _ = solve_batch(strategy, specs, r_max=max_r + 1)
+        table, race = BUILDERS[strategy](key, jobs, r_j[jobs.job_id], p,
+                                         max_r=max_r)
+    events = int(np.asarray(table.active).sum())
+
+    def run():
+        realized, _, _ = replay(table, race, jobs, slots, passes=2)
+        jax.block_until_ready(realized.task_completion)
+        return realized
+
+    realized = run()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        realized = run()
+    dt = (time.perf_counter() - t0) / iters
+    return {"strategy": strategy, "slots": slots, "events": events,
+            "sec": dt, "events_per_sec": events / dt,
+            "util": float(utilization(realized.busy_time, slots,
+                                      realized.span)) if slots else 0.0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=300)
+    ap.add_argument("--slots", type=str, default="100,500,2000,8000")
+    ap.add_argument("--strategies", type=str,
+                    default="hadoop_s,clone,sresume")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    jobs = generate(n_jobs=args.jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+    print(f"trace: {jobs.n_jobs} jobs, {jobs.total_tasks} tasks")
+    print(f"{'strategy':10s} {'slots':>7s} {'events':>9s} {'sec':>8s} "
+          f"{'events/s':>10s} {'util':>6s}")
+    for s in args.strategies.split(","):
+        for k in (int(x) for x in args.slots.split(",")):
+            r = bench(jobs, s, k, p, key, iters=args.iters)
+            print(f"{r['strategy']:10s} {r['slots']:7d} {r['events']:9d} "
+                  f"{r['sec']:8.3f} {r['events_per_sec']:10.0f} "
+                  f"{r['util']:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,13 @@ optimizing r* per job with Algorithm 1 and executing all six strategies:
 Hadoop-NS, Hadoop-S, Mantri (baselines) and Clone / S-Restart / S-Resume
 (Chronos). Prints the Fig-2/3-style comparison.
 
+By default capacity is infinite (the paper's analytic regime). With
+`--slots N` the same draws replay through the finite-capacity cluster
+engine (repro.cluster): attempts queue on N machine slots under FIFO or
+EDF dispatch, and the table gains utilization / queue-wait columns.
+
 Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
+      PYTHONPATH=src python examples/simulate_cluster.py --jobs 200 --slots 2000
 """
 import argparse
 
@@ -17,23 +23,55 @@ from repro.sim import generate, SimParams, run_all
 ap = argparse.ArgumentParser()
 ap.add_argument("--jobs", type=int, default=2700)
 ap.add_argument("--theta", type=float, default=1e-4)
+ap.add_argument("--slots", type=int, default=0,
+                help="machine slots (0 = infinite capacity, the default)")
+ap.add_argument("--discipline", choices=("fifo", "edf"), default="fifo")
+ap.add_argument("--passes", type=int, default=2,
+                help="relaxation passes of the capacity replay (min 2: "
+                     "pass 1 schedules primaries only)")
+ap.add_argument("--governor", action="store_true",
+                help="enable the load-adaptive r* governor")
+ap.add_argument("--admission-slack", type=float, default=0.0,
+                help="> 0 enables deadline-aware admission control")
 args = ap.parse_args()
 
 jobs = generate(n_jobs=args.jobs, seed=0)
 print(f"trace: {jobs.n_jobs} jobs, {jobs.total_tasks} tasks, "
       f"beta in [{float(jobs.beta.min()):.2f}, {float(jobs.beta.max()):.2f}]")
 
-outs, r_min = run_all(jax.random.PRNGKey(0), jobs, SimParams(),
-                      theta=args.theta)
+ORDER = ("hadoop_ns", "hadoop_s", "mantri", "clone", "srestart", "sresume")
 
-print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} {'mean r*':>8s}")
-for name in ("hadoop_ns", "hadoop_s", "mantri", "clone", "srestart",
-             "sresume"):
-    o = outs[name]
-    r_mean = float(jnp.mean(o.r_opt))
-    print(f"{name:12s} {float(o.result.pocd):8.3f} "
-          f"{float(o.result.mean_cost):10.0f} {float(o.utility):9.3f} "
-          f"{r_mean:8.2f}")
+if args.slots > 0:
+    from repro.cluster import (run_cluster, GovernorConfig, AdmissionConfig)
+    governor = GovernorConfig() if args.governor else None
+    admission = (AdmissionConfig(slack=args.admission_slack)
+                 if args.admission_slack > 0 else None)
+    outs, r_min = run_cluster(jax.random.PRNGKey(0), jobs, SimParams(),
+                              slots=args.slots, theta=args.theta,
+                              discipline=args.discipline, passes=args.passes,
+                              governor=governor, admission=admission)
+    print(f"capacity: {args.slots} slots, {args.discipline} dispatch"
+          + (", governor on" if governor else "")
+          + (f", admission slack {args.admission_slack}" if admission else ""))
+    print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} "
+          f"{'mean r*':>8s} {'util':>6s} {'wait':>8s}")
+    for name in ORDER:
+        o = outs[name]
+        print(f"{name:12s} {float(o.result.pocd):8.3f} "
+              f"{float(o.result.mean_cost):10.0f} {float(o.utility):9.3f} "
+              f"{float(jnp.mean(o.r_opt)):8.2f} "
+              f"{float(o.queue.utilization):6.3f} "
+              f"{float(o.queue.mean_wait):8.2f}")
+else:
+    outs, r_min = run_all(jax.random.PRNGKey(0), jobs, SimParams(),
+                          theta=args.theta)
+    print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} "
+          f"{'mean r*':>8s}")
+    for name in ORDER:
+        o = outs[name]
+        print(f"{name:12s} {float(o.result.pocd):8.3f} "
+              f"{float(o.result.mean_cost):10.0f} {float(o.utility):9.3f} "
+              f"{float(jnp.mean(o.r_opt)):8.2f}")
 
 ns, best = outs["hadoop_ns"], outs["sresume"]
 print(f"\nChronos (S-Resume) vs Hadoop-NS: PoCD +"

@@ -1,0 +1,23 @@
+"""Finite-capacity cluster engine: slot-constrained, arrival-driven
+speculative execution.
+
+The flat Monte-Carlo pipeline (`repro.sim`) is infinite-capacity: every
+speculative attempt materializes on a free slot at its analytic launch time.
+This package replays the same traces — same PRNG draws — through a bounded
+slot pool with FIFO/EDF dispatch, exposing queueing delay, utilization, and
+the PoCD degradation speculation itself induces under load.
+
+    from repro.cluster import run_cluster
+    outs, r_min = run_cluster(key, jobs, SimParams(), slots=2000)
+
+`run_cluster(..., slots=None)` reproduces `sim.runner.run_all`
+draw-for-draw. See DESIGN.md §10 for the event encoding and capacity model.
+"""
+from .admission import (AdmissionConfig, GovernorConfig, admit_jobs,
+                        apply_governor, offered_load)
+from .engine import (ALL_STRATEGIES, ClusterOutput, QueueMetrics, replay,
+                     run_cluster, run_cluster_strategy)
+from .events import AttemptTable, Realized, dispatch_scan, predicted_holds, \
+    realize
+from .slots import DISCIPLINES, SlotPool, dispatch_order, make_pool, \
+    utilization

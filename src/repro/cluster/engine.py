@@ -1,0 +1,361 @@
+"""Strategy execution under finite capacity.
+
+Each of the six strategies is lowered to an `AttemptTable` using *exactly the
+same* PRNG splits and Pareto draws as the flat simulator
+(`sim/strategies.py`), so at `slots=None` (infinite capacity) the cluster
+engine reproduces the flat results draw-for-draw; with finite slots the same
+draws are replayed through the bounded pool, exposing queueing delay,
+utilization, and the PoCD degradation speculation induces under load.
+
+Replay is a small fixed-point relaxation (default 2 passes):
+
+  pass 1  schedules primary attempts only (release = job arrival),
+  pass k  recomputes speculative releases as primary_start + rel_offset
+          (tau_est checks / launch ranks follow the primary's actual start)
+          and reschedules the combined unit set in dispatch order.
+
+Every pass is one `dispatch_scan` (jax.lax.scan over the slot pool); there is
+no Python event loop on the hot path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.optimizer import solve_batch
+from ..sim.metrics import SimResult, aggregate, net_utility
+from ..sim.runner import jobspecs_of
+from ..sim.strategies import SimParams, _detect, _pareto, _rank_among_job
+from ..sim.trace import JobSet
+from .admission import (AdmissionConfig, GovernorConfig, admit_jobs,
+                        apply_governor)
+from .events import AttemptTable, dispatch_scan, predicted_holds, realize
+from .slots import dispatch_order, make_pool, utilization
+
+ALL_STRATEGIES = ("hadoop_ns", "hadoop_s", "mantri",
+                  "clone", "srestart", "sresume")
+
+
+class QueueMetrics(NamedTuple):
+    mean_wait: jnp.ndarray      # mean slot-acquisition delay over attempts
+    max_wait: jnp.ndarray
+    utilization: jnp.ndarray    # busy slot-time / (slots * makespan)
+    preempted: jnp.ndarray      # attempts killed before finishing their work
+    admitted_frac: jnp.ndarray  # fraction of jobs admitted
+    slots: Optional[int]        # None = infinite capacity
+
+
+class ClusterOutput(NamedTuple):
+    result: SimResult
+    r_opt: jnp.ndarray
+    utility: jnp.ndarray
+    theory_pocd: jnp.ndarray
+    theory_cost: jnp.ndarray
+    queue: QueueMetrics
+
+
+# ---------------------------------------------------------------------------
+# Strategy -> AttemptTable lowering (PRNG usage mirrors sim/strategies.py)
+# ---------------------------------------------------------------------------
+
+
+def _assemble(jobs: JobSet, rel, dur, hold_cap, can_win, active) -> AttemptTable:
+    """Flatten (T, A) per-attempt arrays into a (T*A,) AttemptTable."""
+    T, A = dur.shape
+    flat = lambda x: jnp.broadcast_to(x, (T, A)).reshape(-1)
+    task_id = jnp.repeat(jnp.arange(T, dtype=jnp.int32), A)
+    is_primary = flat(jnp.arange(A)[None, :] == 0)
+    return AttemptTable(
+        task_id=task_id, job_id=jobs.job_id[task_id],
+        rel_offset=flat(rel).astype(jnp.float32),
+        dur=flat(dur).astype(jnp.float32),
+        hold_cap=flat(hold_cap).astype(jnp.float32),
+        can_win=flat(can_win), active=flat(active), is_primary=is_primary)
+
+
+def build_clone(key, jobs: JobSet, r_task, p: SimParams, max_r=8, oracle=True):
+    T = jobs.total_tasks
+    t_min, beta = jobs.task_t_min, jobs.task_beta
+    tau_kill = (p.tau_est_frac + p.tau_kill_gap_frac) * t_min
+    att = _pareto(key, t_min[:, None], beta[:, None], (T, max_r + 1))
+    slot = jnp.arange(max_r + 1)[None, :]
+    active = slot <= r_task[:, None]
+    table = _assemble(jobs, jnp.zeros((T, 1)), att, tau_kill[:, None],
+                      jnp.ones((T, 1), bool), active)
+    return table, False
+
+
+def build_srestart(key, jobs: JobSet, r_task, p: SimParams, max_r=8,
+                   oracle=True):
+    T = jobs.total_tasks
+    t_min, beta, D = jobs.task_t_min, jobs.task_beta, jobs.task_D
+    tau_est = p.tau_est_frac * t_min
+    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    extras = _pareto(k2, t_min[:, None], beta[:, None], (T, max_r))
+    straggler = _detect(T1, t_min, D, tau_est, p, oracle)
+    slot = jnp.arange(max_r)[None, :]
+    spec_active = (slot < r_task[:, None]) & straggler[:, None]
+
+    rel = jnp.concatenate([jnp.zeros((T, 1)),
+                           jnp.broadcast_to(tau_est[:, None], (T, max_r))], 1)
+    dur = jnp.concatenate([T1[:, None], extras], 1)
+    # losing primary is killed at tau_kill; losing copies at tau_kill too,
+    # billed from their tau_est launch (Thm 3's r*(tau_kill - tau_est) term)
+    hold = jnp.concatenate([tau_kill[:, None],
+                            jnp.broadcast_to((tau_kill - tau_est)[:, None],
+                                             (T, max_r))], 1)
+    active = jnp.concatenate([jnp.ones((T, 1), bool), spec_active], 1)
+    table = _assemble(jobs, rel, dur, hold,
+                      jnp.ones((T, max_r + 1), bool), active)
+    return table, False
+
+
+def build_sresume(key, jobs: JobSet, r_task, p: SimParams, max_r=8,
+                  oracle=True):
+    T = jobs.total_tasks
+    t_min, beta, D = jobs.task_t_min, jobs.task_beta, jobs.task_D
+    tau_est = p.tau_est_frac * t_min
+    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    fresh = _pareto(k2, t_min[:, None], beta[:, None], (T, max_r + 1))
+    resumed = jnp.maximum(t_min[:, None], (1.0 - p.phi_est) * fresh)
+    straggler = _detect(T1, t_min, D, tau_est, p, oracle)
+    slot = jnp.arange(max_r + 1)[None, :]
+    spec_active = (slot <= r_task[:, None]) & straggler[:, None]
+
+    rel = jnp.concatenate([jnp.zeros((T, 1)),
+                           jnp.broadcast_to(tau_est[:, None],
+                                            (T, max_r + 1))], 1)
+    dur = jnp.concatenate([T1[:, None], resumed], 1)
+    # a straggling primary is killed at tau_est (its work is handed off) and
+    # can never win; resumed losers are killed at tau_kill
+    hold = jnp.concatenate([jnp.where(straggler, tau_est, T1)[:, None],
+                            jnp.broadcast_to((tau_kill - tau_est)[:, None],
+                                             (T, max_r + 1))], 1)
+    can_win = jnp.concatenate([~straggler[:, None],
+                               jnp.ones((T, max_r + 1), bool)], 1)
+    active = jnp.concatenate([jnp.ones((T, 1), bool), spec_active], 1)
+    table = _assemble(jobs, rel, dur, hold, can_win, active)
+    return table, False
+
+
+def build_hadoop_ns(key, jobs: JobSet, p: SimParams):
+    T1 = _pareto(key, jobs.task_t_min, jobs.task_beta, (jobs.total_tasks,))
+    T = jobs.total_tasks
+    table = _assemble(jobs, jnp.zeros((T, 1)), T1[:, None],
+                      jnp.full((T, 1), jnp.inf),
+                      jnp.ones((T, 1), bool), jnp.ones((T, 1), bool))
+    return table, False
+
+
+def build_hadoop_s(key, jobs: JobSet, p: SimParams):
+    T = jobs.total_tasks
+    t_min, beta = jobs.task_t_min, jobs.task_beta
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    T2 = _pareto(k2, t_min, beta, (T,))
+    t_first = jax.ops.segment_min(T1, jobs.job_id, jobs.n_jobs)[jobs.job_id]
+    delta = p.check_period_frac * t_min
+    rank = _rank_among_job(T1, jobs.job_id, jobs.n_jobs).astype(jnp.float32)
+    s_launch = t_first + (rank + 1.0) * delta
+
+    rel = jnp.stack([jnp.zeros((T,)), s_launch], 1)
+    dur = jnp.stack([T1, T2], 1)
+    active = jnp.stack([jnp.ones((T,), bool), T1 > s_launch], 1)
+    table = _assemble(jobs, rel, dur, jnp.full((T, 2), jnp.inf),
+                      jnp.ones((T, 2), bool), active)
+    return table, True  # race: loser runs until the task completes
+
+
+def build_mantri(key, jobs: JobSet, p: SimParams):
+    T = jobs.total_tasks
+    t_min, beta = jobs.task_t_min, jobs.task_beta
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    mean_t = jax.ops.segment_sum(T1, jobs.job_id, jobs.n_jobs) / \
+        jnp.maximum(jobs.n_tasks.astype(jnp.float32), 1.0)
+    gate = mean_t[jobs.job_id] + p.mantri_gate_frac * t_min
+    extras = _pareto(k2, t_min[:, None], beta[:, None],
+                     (T, p.mantri_max_extra))
+    delta = p.check_period_frac * t_min
+    launch = gate[:, None] + delta[:, None] * \
+        jnp.arange(p.mantri_max_extra)[None, :]
+
+    rel = jnp.concatenate([jnp.zeros((T, 1)), launch], 1)
+    dur = jnp.concatenate([T1[:, None], extras], 1)
+    active = jnp.concatenate([jnp.ones((T, 1), bool), T1[:, None] > launch], 1)
+    A = p.mantri_max_extra + 1
+    table = _assemble(jobs, rel, dur, jnp.full((T, A), jnp.inf),
+                      jnp.ones((T, A), bool), active)
+    return table, True
+
+
+BUILDERS = {
+    "clone": build_clone, "srestart": build_srestart, "sresume": build_sresume,
+}
+BASELINE_BUILDERS = {
+    "hadoop_ns": build_hadoop_ns, "hadoop_s": build_hadoop_s,
+    "mantri": build_mantri,
+}
+
+
+# ---------------------------------------------------------------------------
+# Capacity replay
+# ---------------------------------------------------------------------------
+
+
+def replay(table: AttemptTable, race: bool, jobs: JobSet,
+           slots: Optional[int], discipline: str = "fifo", passes: int = 2):
+    """Replay an AttemptTable through the slot pool; see module docstring.
+
+    `passes` counts scheduling passes total: pass 1 is primaries-only, so at
+    least one combined pass (passes >= 2) is required for speculative units
+    to ever acquire a slot.
+    """
+    if passes < 2:
+        raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
+                         f"only), got {passes}")
+    T = jobs.total_tasks
+    sched_hold = predicted_holds(table, race, T)
+    arrival_u = jobs.arrival[table.job_id]
+
+    if slots is None:
+        release = arrival_u + table.rel_offset
+        start = release
+        return realize(table, release, start, sched_hold, race, T), release, start
+
+    # host-side orchestration: compact to active units, scan per pass
+    tid = np.asarray(table.task_id)
+    active = np.asarray(table.active)
+    is_prim = np.asarray(table.is_primary)
+    rel_off = np.asarray(table.rel_offset)
+    hold_np = np.asarray(sched_hold)
+    arr_np = np.asarray(arrival_u)
+    deadline_u = np.asarray((jobs.arrival + jobs.D))[np.asarray(table.job_id)]
+
+    def scan_subset(idx, release_np):
+        order = dispatch_order(discipline, release_np[idx], deadline_u[idx])
+        sub = idx[order]
+        pool = make_pool(slots, t0=0.0)
+        _, starts = dispatch_scan(
+            pool, jnp.asarray(release_np[sub]), jnp.asarray(hold_np[sub]),
+            jnp.ones((sub.size,), bool))
+        out = np.array(release_np)
+        out[sub] = np.asarray(starts)
+        return out
+
+    prim_idx = np.flatnonzero(active & is_prim)
+    all_idx = np.flatnonzero(active)
+    primary_start = np.zeros((T,), np.float32)
+
+    starts_np = scan_subset(prim_idx, arr_np)          # pass 1: primaries
+    primary_start[tid[prim_idx]] = starts_np[prim_idx]
+    release_np = np.where(is_prim, arr_np,
+                          primary_start[tid] + rel_off).astype(np.float32)
+    for i in range(passes - 1):                        # combined passes
+        starts_np = scan_subset(all_idx, release_np)
+        # refresh releases only if another scan will consume them: the
+        # returned release must be the one the final scan dispatched
+        # against, or wait = start - release misreports queueing
+        if i < passes - 2:
+            primary_start[tid[prim_idx]] = starts_np[prim_idx]
+            release_np = np.where(is_prim, arr_np,
+                                  primary_start[tid] + rel_off
+                                  ).astype(np.float32)
+
+    release = jnp.asarray(release_np)
+    start = jnp.asarray(starts_np)
+    return realize(table, release, start, sched_hold, race, T), release, start
+
+
+# ---------------------------------------------------------------------------
+# run_cluster — the finite-capacity mirror of sim.runner.run_all
+# ---------------------------------------------------------------------------
+
+
+def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
+                         slots: Optional[int] = None, theta=1e-4, r_min=0.0,
+                         max_r: int = 8, oracle: bool = True,
+                         discipline: str = "fifo", passes: int = 2,
+                         governor: Optional[GovernorConfig] = None,
+                         admitted: Optional[np.ndarray] = None
+                         ) -> ClusterOutput:
+    J = jobs.n_jobs
+    if strategy in BASELINE_BUILDERS:
+        table, race = BASELINE_BUILDERS[strategy](key, jobs, p)
+        r_j = jnp.zeros((J,), jnp.int32)
+        th_p = jnp.zeros((J,))
+        th_c = jnp.zeros((J,))
+    else:
+        specs = jobspecs_of(jobs, p, theta, r_min)
+        if governor is not None and slots is not None:
+            specs = apply_governor(specs, jobs, slots, governor)
+        r_j, _, th_p, th_c = solve_batch(strategy, specs, r_max=max_r + 1)
+        th_c = th_c * specs.C
+        r_task = r_j[jobs.job_id]
+        table, race = BUILDERS[strategy](key, jobs, r_task, p, max_r=max_r,
+                                         oracle=oracle)
+
+    admitted_frac = jnp.float32(1.0)
+    if admitted is not None:
+        adm = jnp.asarray(admitted)
+        table = table._replace(active=table.active & adm[table.job_id])
+        admitted_frac = jnp.mean(adm.astype(jnp.float32))
+
+    realized, release, start = replay(table, race, jobs, slots,
+                                      discipline=discipline, passes=passes)
+    completion_rel = realized.task_completion - jobs.arrival[jobs.job_id]
+    res = aggregate(jobs, completion_rel, realized.task_machine)
+
+    n_active = jnp.maximum(jnp.sum(table.active.astype(jnp.float32)), 1.0)
+    util = (utilization(realized.busy_time, slots, realized.span)
+            if slots is not None else jnp.float32(0.0))
+    queue = QueueMetrics(
+        mean_wait=jnp.sum(realized.wait) / n_active,
+        max_wait=jnp.max(realized.wait),
+        utilization=util, preempted=realized.preempted,
+        admitted_frac=admitted_frac, slots=slots)
+    return ClusterOutput(
+        result=res, r_opt=r_j,
+        utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
+        theory_pocd=th_p, theory_cost=th_c, queue=queue)
+
+
+def run_cluster(key, jobs: JobSet, p: SimParams, slots: Optional[int] = None,
+                theta=1e-4, strategies=ALL_STRATEGIES,
+                r_min_from_ns: bool = True, max_r: int = 8,
+                oracle: bool = True, discipline: str = "fifo",
+                passes: int = 2,
+                governor: Optional[GovernorConfig] = None,
+                admission: Optional[AdmissionConfig] = None):
+    """Finite-capacity mirror of `sim.runner.run_all`.
+
+    Returns (outs, r_min) where outs maps strategy -> ClusterOutput. With
+    slots=None this reproduces run_all's results draw-for-draw (same key
+    splits); with finite slots the same draws queue on the bounded pool.
+    """
+    keys = jax.random.split(key, len(strategies))
+    admitted = None
+    if admission is not None and slots is not None:
+        admitted = admit_jobs(jobs, slots, admission)
+    kw = dict(slots=slots, theta=theta, max_r=max_r, oracle=oracle,
+              discipline=discipline, passes=passes, governor=governor,
+              admitted=admitted)
+    outs = {}
+    r_min = 0.0
+    for k, name in zip(keys, strategies):
+        if name == "hadoop_ns":
+            outs[name] = run_cluster_strategy(k, jobs, name, p, r_min=0.0, **kw)
+            if r_min_from_ns:
+                r_min = float(outs[name].result.pocd) - 1e-3
+    for k, name in zip(keys, strategies):
+        if name == "hadoop_ns":
+            continue
+        outs[name] = run_cluster_strategy(k, jobs, name, p, r_min=r_min, **kw)
+    return outs, r_min

@@ -1,0 +1,155 @@
+"""Event encoding and the vectorized dispatch scan.
+
+Every speculative-execution strategy is lowered to a flat table of
+*attempt-units* (one row per potential attempt of a task). Each unit encodes
+its whole analytic lifecycle, so the discrete events of the paper's cluster
+
+    ARRIVAL    — the unit becomes dispatchable (job arrival for primaries,
+                 primary_start + rel_offset for speculative copies: tau_est
+                 checks and Hadoop/Mantri launch ranks are offsets relative
+                 to the primary attempt's actual slot-acquisition time),
+    FINISH     — start + dur: the unit completes the task's work,
+    EST_CHECK  — the tau_est straggler check folded into `active`/`can_win`
+                 (detection is sampled once; under capacity the check fires
+                 at primary_start + tau_est because rel_offset shifts with
+                 the primary's start),
+    KILL       — the attempt is preempted: losers of a kill-timer strategy
+                 hold their slot for exactly `hold_cap` (clone / S-Restart /
+                 S-Resume bill tau_kill-style timers); losers of a *race*
+                 strategy (Hadoop-S, Mantri) hold until the task completes,
+
+collapse into a single scan over units in dispatch order whose only carried
+state is the slot pool. No Python-level event heap ever touches the hot
+path; a ~1M-task trace schedules in seconds on CPU (see
+benchmarks/cluster_bench.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .slots import SlotPool
+
+
+class AttemptTable(NamedTuple):
+    """Flat per-attempt-unit arrays, (U,) each. U = total_tasks * width."""
+    task_id: jnp.ndarray      # int32 — flat task index
+    job_id: jnp.ndarray       # int32
+    rel_offset: jnp.ndarray   # f32 — ARRIVAL offset from the primary's start
+    dur: jnp.ndarray          # f32 — time from start to FINISH
+    hold_cap: jnp.ndarray     # f32 — KILL: slot-hold if the unit loses
+    can_win: jnp.ndarray      # bool — may its FINISH complete the task?
+    active: jnp.ndarray       # bool — does this unit ever dispatch?
+    is_primary: jnp.ndarray   # bool
+
+
+class Realized(NamedTuple):
+    """Post-schedule outcome of one strategy replay."""
+    task_completion: jnp.ndarray   # (T,) absolute FINISH of each task
+    task_machine: jnp.ndarray      # (T,) billed slot-time over its attempts
+    wait: jnp.ndarray              # (U,) start - release (0 for inactive)
+    busy_time: jnp.ndarray         # scalar — total billed slot-time
+    span: jnp.ndarray              # scalar — makespan of the replay
+    preempted: jnp.ndarray         # scalar — attempts killed before FINISH
+
+
+def _winner_mask(finish, eligible, task_id, n_tasks):
+    """Exactly-one-winner mask per task: earliest FINISH, ties broken by
+    unit index (the t_min floor of S-Resume makes exact duration ties
+    common, and double-billing a tied pair inflates machine time)."""
+    U = finish.shape[0]
+    masked = jnp.where(eligible, finish, jnp.inf)
+    best = jax.ops.segment_min(masked, task_id, n_tasks)
+    idx = jnp.arange(U, dtype=jnp.int32)
+    cand = eligible & (masked <= best[task_id])
+    widx = jax.ops.segment_min(jnp.where(cand, idx, U), task_id, n_tasks)
+    return idx == widx[task_id], best
+
+
+def predicted_holds(table: AttemptTable, race: bool, n_tasks: int):
+    """A-priori slot-hold time per unit, from the infinite-capacity outcome.
+
+    The winner (min rel_offset + dur among can_win units) holds `dur`; losers
+    hold `hold_cap` (kill-timer strategies) or until the predicted task
+    completion (race strategies). Under capacity the realized winner can
+    differ; `realize` re-derives it from actual starts, capped by these
+    holds so the scheduled occupancy is never exceeded (utilization <= 1).
+    """
+    is_winner, pred_completion = _winner_mask(
+        table.rel_offset + table.dur, table.active & table.can_win,
+        table.task_id, n_tasks)
+    if race:
+        lose_hold = jnp.maximum(
+            pred_completion[table.task_id] - table.rel_offset, 0.0)
+        lose_hold = jnp.where(jnp.isfinite(lose_hold), lose_hold, 0.0)
+        lose_hold = jnp.minimum(lose_hold, table.hold_cap)
+    else:
+        lose_hold = table.hold_cap
+    hold = jnp.where(is_winner, table.dur, lose_hold)
+    return jnp.where(table.active, hold, 0.0)
+
+
+@partial(jax.jit, donate_argnums=())
+def dispatch_scan(pool: SlotPool, release, hold, active):
+    """The event loop: offer each unit (in dispatch order) the earliest-idle
+    slot; it starts at max(its ARRIVAL, that slot's idle time) and occupies
+    the slot for `hold`. Inactive units pass through without touching state.
+
+    Returns (pool', start_times). Exact G/G/K FIFO when units are sorted by
+    release; strict-priority EDF when sorted by deadline (slots.py).
+    """
+    def step(state, x):
+        free, gmin = state
+        rel, h, act = x
+        gi = jnp.argmin(gmin)
+        row = free[gi]
+        si = jnp.argmin(row)
+        start = jnp.maximum(rel, row[si])
+        new_row = row.at[si].set(start + h)
+        free = jnp.where(act, free.at[gi].set(new_row), free)
+        gmin = jnp.where(act, gmin.at[gi].set(jnp.min(new_row)), gmin)
+        return (free, gmin), jnp.where(act, start, rel)
+
+    (free, gmin), starts = jax.lax.scan(
+        step, (pool.free, pool.gmin), (release, hold, active))
+    return SlotPool(free=free, gmin=gmin), starts
+
+
+def realize(table: AttemptTable, release, start, sched_hold, race: bool,
+            n_tasks: int) -> Realized:
+    """Derive task completions, billing, and queue metrics from starts.
+
+    Completion is the earliest FINISH over a task's *eligible* units: those
+    that finish before their own kill timer (`dur <= sched_hold`), so an
+    attempt the schedule killed at tau_kill can never complete a task on
+    slot-time the pool already freed. The predicted winner reserved its full
+    `dur`, so every task always has at least one eligible unit; queueing can
+    still shift the realized winner to a predicted loser that beat its
+    timer. Billing: the realized winner is billed `dur`; losers are billed
+    `hold_cap` (kill-timer) or time-to-completion (race), capped at the
+    scheduled hold so billed occupancy never exceeds what the pool reserved.
+    """
+    eligible = table.active & table.can_win & (table.dur <= sched_hold)
+    is_winner, completion = _winner_mask(
+        start + table.dur, eligible, table.task_id, n_tasks)
+    if race:
+        lose = jnp.maximum(completion[table.task_id] - start, 0.0)
+        lose = jnp.where(jnp.isfinite(lose), lose, 0.0)
+    else:
+        lose = table.hold_cap
+    billed = jnp.where(is_winner, table.dur, jnp.minimum(lose, sched_hold))
+    billed = jnp.where(table.active, jnp.minimum(billed, sched_hold), 0.0)
+    task_machine = jax.ops.segment_sum(billed, table.task_id, n_tasks)
+
+    wait = jnp.where(table.active, jnp.maximum(start - release, 0.0), 0.0)
+    busy = jnp.sum(billed)
+    end = jnp.where(table.active, start + billed, -jnp.inf)
+    t0 = jnp.min(jnp.where(table.active, release, jnp.inf))
+    span = jnp.maximum(jnp.max(end) - t0, 1e-9)
+    preempted = jnp.sum((table.active & ~is_winner &
+                         (billed < table.dur - 1e-6)).astype(jnp.int32))
+    return Realized(task_completion=completion, task_machine=task_machine,
+                    wait=wait, busy_time=busy, span=span, preempted=preempted)

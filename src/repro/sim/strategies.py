@@ -144,7 +144,6 @@ def _rank_among_job(values, job_id, n_jobs):
     T = values.shape[0]
     order = jnp.argsort(-values)
     sorted_jobs = job_id[order]
-    ones = jnp.ones((T,), jnp.int32)
     # position within job along the sorted order
     seen = jnp.zeros((n_jobs,), jnp.int32)
 

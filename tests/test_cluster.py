@@ -1,0 +1,161 @@
+"""Finite-capacity cluster engine: infinite-slot equivalence with the flat
+simulator, capacity monotonicity, slot-pool invariants, governor/admission."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sim import uniform_jobset, SimParams, run_strategy
+from repro.cluster import (run_cluster, run_cluster_strategy, make_pool,
+                           dispatch_scan, GovernorConfig, AdmissionConfig)
+from repro.cluster.admission import admit_jobs
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+ALL = ("hadoop_ns", "hadoop_s", "mantri", "clone", "srestart", "sresume")
+
+
+@pytest.fixture(scope="module")
+def uniform_jobs():
+    return uniform_jobset(800, 10, t_min=10.0, beta=2.0, D=50.0)
+
+
+@pytest.fixture(scope="module")
+def small_jobs():
+    return uniform_jobset(150, 10, t_min=10.0, beta=2.0, D=50.0)
+
+
+# ---------------------------------------------------------------------------
+# (a) slots = inf / slots >= peak demand reproduce the flat simulator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_infinite_slots_match_flat(uniform_jobs, strategy):
+    """Same key => same draws => identical PoCD/cost at infinite capacity."""
+    flat = run_strategy(KEY, uniform_jobs, strategy, P, theta=1e-3, max_r=8)
+    clus = run_cluster_strategy(KEY, uniform_jobs, strategy, P, slots=None,
+                                theta=1e-3, max_r=8)
+    assert float(clus.result.pocd) == pytest.approx(
+        float(flat.result.pocd), abs=0.005)
+    assert float(clus.result.mean_cost) == pytest.approx(
+        float(flat.result.mean_cost), rel=0.01)
+    assert float(clus.queue.mean_wait) == 0.0
+
+
+@pytest.mark.parametrize("strategy", ["sresume", "hadoop_s"])
+def test_ample_slots_match_flat(small_jobs, strategy):
+    """slots >= peak demand exercises the scan but never queues."""
+    flat = run_strategy(KEY, small_jobs, strategy, P, theta=1e-3, max_r=8)
+    clus = run_cluster_strategy(KEY, small_jobs, strategy, P, slots=20_000,
+                                theta=1e-3, max_r=8)
+    assert float(clus.result.pocd) == pytest.approx(
+        float(flat.result.pocd), abs=0.01)
+    assert float(clus.result.mean_cost) == pytest.approx(
+        float(flat.result.mean_cost), rel=0.02)
+    assert float(clus.queue.mean_wait) == pytest.approx(0.0, abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# (b) tight slots: PoCD monotone in capacity, utilization bounded
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["sresume", "hadoop_s"])
+def test_tight_slots_monotone(small_jobs, strategy):
+    slot_grid = (40, 80, 160, 320, None)
+    pocds, waits = [], []
+    for slots in slot_grid:
+        o = run_cluster_strategy(KEY, small_jobs, strategy, P, slots=slots,
+                                 theta=1e-3, max_r=8)
+        pocds.append(float(o.result.pocd))
+        waits.append(float(o.queue.mean_wait))
+        u = float(o.queue.utilization)
+        assert 0.0 <= u <= 1.0 + 1e-6, (strategy, slots, u)
+        assert float(o.queue.max_wait) >= 0.0
+    # fewer slots -> never better PoCD, never shorter queues
+    for lo, hi in zip(pocds, pocds[1:]):
+        assert lo <= hi + 1e-6, (strategy, pocds)
+    for hi_w, lo_w in zip(waits, waits[1:]):
+        assert hi_w >= lo_w - 1e-6, (strategy, waits)
+
+
+def test_single_pass_rejected(small_jobs):
+    """passes=1 would never schedule speculative units; it must be refused
+    rather than silently behaving like passes=2."""
+    with pytest.raises(ValueError, match="passes"):
+        run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=100,
+                             passes=1)
+
+
+def test_edf_discipline_valid(small_jobs):
+    o = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=100,
+                             theta=1e-3, discipline="edf")
+    assert 0.0 <= float(o.result.pocd) <= 1.0
+    assert 0.0 <= float(o.queue.utilization) <= 1.0 + 1e-6
+    assert int(o.queue.preempted) >= 0
+
+
+# ---------------------------------------------------------------------------
+# slot-pool / event-scan invariants
+# ---------------------------------------------------------------------------
+
+
+def test_make_pool_padding():
+    pool = make_pool(5, t0=2.0)
+    free = np.asarray(pool.free).ravel()
+    assert (free[np.isfinite(free)] == 2.0).sum() == 5
+    assert np.isinf(free).sum() == free.size - 5
+
+
+def test_dispatch_scan_single_slot_serializes():
+    pool = make_pool(1)
+    release = jnp.zeros((3,), jnp.float32)
+    hold = jnp.full((3,), 5.0, jnp.float32)
+    _, starts = dispatch_scan(pool, release, hold, jnp.ones((3,), bool))
+    np.testing.assert_allclose(np.asarray(starts), [0.0, 5.0, 10.0])
+
+
+def test_dispatch_scan_skips_inactive():
+    pool = make_pool(1)
+    release = jnp.zeros((3,), jnp.float32)
+    hold = jnp.full((3,), 5.0, jnp.float32)
+    active = jnp.asarray([True, False, True])
+    _, starts = dispatch_scan(pool, release, hold, active)
+    np.testing.assert_allclose(np.asarray(starts), [0.0, 0.0, 5.0])
+
+
+# ---------------------------------------------------------------------------
+# governor + admission
+# ---------------------------------------------------------------------------
+
+
+def test_governor_rescales_r_under_load():
+    jobs = uniform_jobset(300, 10, t_min=10.0, beta=2.0, D=50.0)
+    gov = GovernorConfig(util_threshold=0.05, gain=50.0, window=600.0)
+    base = run_cluster_strategy(KEY, jobs, "clone", P, slots=100, theta=1e-4)
+    throttled = run_cluster_strategy(KEY, jobs, "clone", P, slots=100,
+                                     theta=1e-4, governor=gov)
+    assert float(jnp.mean(throttled.r_opt)) < float(jnp.mean(base.r_opt))
+
+
+def test_admission_rejects_hopeless_jobs():
+    jobs = uniform_jobset(200, 10, t_min=10.0, beta=2.0, D=50.0)
+    admitted = admit_jobs(jobs, 50, AdmissionConfig(slack=0.1))
+    assert 0 < admitted.sum() < jobs.n_jobs
+    o = run_cluster_strategy(KEY, jobs, "hadoop_ns", P, slots=50,
+                             admitted=admitted)
+    assert float(o.queue.admitted_frac) == pytest.approx(
+        admitted.mean(), abs=1e-6)
+    rejected_cost = np.asarray(o.result.job_cost)[~admitted]
+    np.testing.assert_allclose(rejected_cost, 0.0)
+    assert not np.asarray(o.result.job_met)[~admitted].any()
+
+
+def test_run_cluster_mirrors_run_all_interface(small_jobs):
+    outs, r_min = run_cluster(KEY, small_jobs, P, slots=200, theta=1e-3)
+    assert set(outs) == set(ALL)
+    for o in outs.values():
+        assert 0.0 <= float(o.result.pocd) <= 1.0
+        assert 0.0 <= float(o.queue.utilization) <= 1.0 + 1e-6
+    assert 0.0 <= r_min <= 1.0

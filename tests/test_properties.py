@@ -1,8 +1,14 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+hypothesis is an optional test extra (see pyproject.toml); the whole module
+skips cleanly when it is not installed so tier-1 collection never aborts.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (JobSpec, pocd_of, cost_of, utility, solve_grid,
