@@ -6,8 +6,14 @@ The scan cost is O(events * (sqrt(K) + K/sqrt(K))), so events/sec should
 degrade gently as slots grow — this benchmark is the regression guard for
 that property.
 
+`--backend jit` (default) times the fully-compiled replay (sort-key
+dispatch + fori_loop relaxation in one program); `--backend host` times the
+legacy host-orchestrated path (numpy compaction + one device launch per
+pass); `--backend both` prints the speedup side by side.
+
 Run:  PYTHONPATH=src python benchmarks/cluster_bench.py [--jobs 300]
           [--slots 100,500,2000,8000] [--strategies clone,sresume,hadoop_s]
+          [--backend jit|host|both]
 """
 from __future__ import annotations
 
@@ -15,28 +21,26 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.sim import generate, SimParams
-from repro.sim.runner import jobspecs_of
-from repro.core.optimizer import solve_batch
-from repro.cluster.engine import BUILDERS, BASELINE_BUILDERS, replay
+from repro.cluster.engine import build_strategy_table, replay
 from repro.cluster.slots import utilization
 
 
-def bench(jobs, strategy, slots, p, key, theta=1e-4, max_r=8, iters=3):
-    if strategy in BASELINE_BUILDERS:
-        table, race = BASELINE_BUILDERS[strategy](key, jobs, p)
-    else:
-        specs = jobspecs_of(jobs, p, theta, 0.0)
-        r_j, _, _, _ = solve_batch(strategy, specs, r_max=max_r + 1)
-        table, race = BUILDERS[strategy](key, jobs, r_j[jobs.job_id], p,
-                                         max_r=max_r)
+def build_table(jobs, strategy, p, key, theta=1e-4, max_r=8):
+    return build_strategy_table(key, jobs, strategy, p, theta=theta,
+                                max_r=max_r)
+
+
+def bench(jobs, strategy, slots, p, key, theta=1e-4, max_r=8, iters=3,
+          backend="jit"):
+    table, race = build_table(jobs, strategy, p, key, theta, max_r)
     events = int(np.asarray(table.active).sum())
 
     def run():
-        realized, _, _ = replay(table, race, jobs, slots, passes=2)
+        realized, _, _ = replay(table, race, jobs, slots, passes=2,
+                                backend=backend)
         jax.block_until_ready(realized.task_completion)
         return realized
 
@@ -58,20 +62,25 @@ def main():
     ap.add_argument("--strategies", type=str,
                     default="hadoop_s,clone,sresume")
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--backend", choices=("jit", "host", "both"),
+                    default="jit")
     args = ap.parse_args()
 
     jobs = generate(n_jobs=args.jobs, seed=0)
     p = SimParams()
     key = jax.random.PRNGKey(0)
+    backends = ("jit", "host") if args.backend == "both" else (args.backend,)
     print(f"trace: {jobs.n_jobs} jobs, {jobs.total_tasks} tasks")
-    print(f"{'strategy':10s} {'slots':>7s} {'events':>9s} {'sec':>8s} "
-          f"{'events/s':>10s} {'util':>6s}")
+    print(f"{'strategy':10s} {'backend':7s} {'slots':>7s} {'events':>9s} "
+          f"{'sec':>8s} {'events/s':>10s} {'util':>6s}")
     for s in args.strategies.split(","):
         for k in (int(x) for x in args.slots.split(",")):
-            r = bench(jobs, s, k, p, key, iters=args.iters)
-            print(f"{r['strategy']:10s} {r['slots']:7d} {r['events']:9d} "
-                  f"{r['sec']:8.3f} {r['events_per_sec']:10.0f} "
-                  f"{r['util']:6.3f}")
+            for backend in backends:
+                r = bench(jobs, s, k, p, key, iters=args.iters,
+                          backend=backend)
+                print(f"{r['strategy']:10s} {backend:7s} {r['slots']:7d} "
+                      f"{r['events']:9d} {r['sec']:8.3f} "
+                      f"{r['events_per_sec']:10.0f} {r['util']:6.3f}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,38 @@
 """Benchmark harness — one entry per paper table/figure plus framework
 throughput. Prints ``name,us_per_call,derived`` CSV (derived = the headline
-metric for that artifact; see each docstring)."""
+metric for that artifact; see each docstring).
+
+Also maintains ``BENCH_perf.json`` at the repo root: for every perf bench it
+records the current us_per_call/derived next to the recorded pre-optimization
+BASELINE, so the perf trajectory is tracked across PRs. ``--smoke`` runs only
+the perf benches at reduced sizes (CI's dispatch-path regression guard) and
+does not rewrite the tracked JSON.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# Pre-optimization reference, measured at PR 1 (commit 1eb85f8) on the CI
+# container (CPU, 2 cores, interpret-mode kernels) BEFORE the compiled
+# replay / jitted runner / fused kernel landed:
+#   trace_sim_full     — reps=8 via 8 sequential re-traced run_strategy calls
+#                        (2700 jobs; derived = task-executions/sec)
+#   cluster_replay     — 8 sequential host-orchestrated run_cluster_strategy
+#                        calls (sresume, 300 jobs, 2000 slots; derived =
+#                        dispatched attempt-units/sec)
+#   kernel_pocd_mc     — single-mode launch, J=1024 N=32 R=6 (samples/sec)
+#   kernel_pocd_mc_all — 3-mode sweep via 3 separate pocd_mc launches
+BASELINE = {
+    "trace_sim_full": {"us_per_call": 8150181.7, "derived": 895390.1},
+    "cluster_replay": {"us_per_call": 13415000.0, "derived": 74703.0},
+    "kernel_pocd_mc": {"us_per_call": 6871.1, "derived": 28613714.7},
+    "kernel_pocd_mc_all": {"us_per_call": 14406.5, "derived": 40941419.0},
+}
 
 
 def _run(name, fn):
@@ -20,32 +47,84 @@ def _run(name, fn):
             "rows": rows}
 
 
+def perf_benches(perf, smoke: bool):
+    """(name, fn) pairs; smoke mode shrinks sizes so CI stays fast while
+    still exercising every dispatch path (jit replay, reps vmap, fused
+    kernel)."""
+    if smoke:
+        return [
+            ("trace_sim_full",
+             lambda: perf.bench_sim_throughput(n_jobs=150, reps=2)),
+            ("cluster_replay",
+             lambda: perf.bench_cluster_replay(n_jobs=60, slots=200,
+                                               reps=2, iters=1)),
+            ("kernel_pocd_mc",
+             lambda: perf.bench_pocd_kernel(J=200, N=8, R=4)),
+            ("kernel_pocd_mc_all",
+             lambda: perf.bench_pocd_kernel_all(J=200, N=8, R=4)),
+        ]
+    return [
+        ("optimizer_batch_solve", perf.bench_optimizer_throughput),
+        ("trace_sim_full", perf.bench_sim_throughput),
+        ("cluster_replay", perf.bench_cluster_replay),
+        ("kernel_pocd_mc", perf.bench_pocd_kernel),
+        ("kernel_pocd_mc_all", perf.bench_pocd_kernel_all),
+        ("kernel_flash_attention", perf.bench_flash_attention),
+    ]
+
+
+def write_perf_tracker(perf_results) -> None:
+    """BENCH_perf.json: current numbers beside the recorded baseline."""
+    entries = {}
+    for r in perf_results:
+        entry = {"us_per_call": r["us_per_call"], "derived": r["derived"]}
+        base = BASELINE.get(r["name"])
+        if base is not None:
+            entry["baseline_us_per_call"] = base["us_per_call"]
+            entry["baseline_derived"] = base["derived"]
+            entry["speedup_vs_baseline"] = round(
+                base["us_per_call"] / max(r["us_per_call"], 1e-9), 2)
+        entries[r["name"]] = entry
+    payload = {
+        "baseline_recorded_at": "PR 1 (1eb85f8), pre-optimization",
+        "entries": entries,
+    }
+    (REPO_ROOT / "BENCH_perf.json").write_text(
+        json.dumps(payload, indent=1, sort_keys=True) + "\n")
+
+
 def main() -> None:
-    from . import paper_figures as pf
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="perf benches only, reduced sizes, no JSON rewrite")
+    args = ap.parse_args()
+
     from . import perf
 
     results = []
-    # --- paper artifacts ---
-    results.append(_run("fig2_strategies_utility_gain", pf.fig2_strategies))
-    results.append(_run("table1_tau_est_best_utility", pf.table1_tau_est))
-    results.append(_run("table2_tau_kill_best_utility", pf.table2_tau_kill))
-    results.append(_run("fig3_theta_utility_vs_mantri", pf.fig3_theta))
-    results.append(_run("fig4_beta_mean_pocd", pf.fig4_beta))
-    results.append(_run("fig5_rhist_mode_shift", pf.fig5_r_histogram))
+    if not args.smoke:
+        from . import paper_figures as pf
+        results.append(_run("fig2_strategies_utility_gain", pf.fig2_strategies))
+        results.append(_run("table1_tau_est_best_utility", pf.table1_tau_est))
+        results.append(_run("table2_tau_kill_best_utility", pf.table2_tau_kill))
+        results.append(_run("fig3_theta_utility_vs_mantri", pf.fig3_theta))
+        results.append(_run("fig4_beta_mean_pocd", pf.fig4_beta))
+        results.append(_run("fig5_rhist_mode_shift", pf.fig5_r_histogram))
 
     # --- framework perf (us_per_call = one solver/sim/kernel invocation) ---
-    for name, fn in [("optimizer_batch_solve", perf.bench_optimizer_throughput),
-                     ("trace_sim_full", perf.bench_sim_throughput),
-                     ("kernel_pocd_mc", perf.bench_pocd_kernel),
-                     ("kernel_flash_attention", perf.bench_flash_attention)]:
+    perf_results = []
+    for name, fn in perf_benches(perf, args.smoke):
         dt, rate = fn()
-        results.append({"name": name, "us_per_call": dt * 1e6,
-                        "derived": rate, "rows": None})
+        perf_results.append({"name": name, "us_per_call": dt * 1e6,
+                             "derived": rate, "rows": None})
+    results.extend(perf_results)
 
-    out_dir = Path("artifacts")
-    out_dir.mkdir(exist_ok=True)
-    (out_dir / "bench_results.json").write_text(
-        json.dumps(results, indent=1, default=str))
+    if not args.smoke:
+        out_dir = Path("artifacts")
+        out_dir.mkdir(exist_ok=True)
+        (out_dir / "bench_results.json").write_text(
+            json.dumps(results, indent=1, default=str))
+        write_perf_tracker(perf_results)
 
     print("name,us_per_call,derived")
     for r in results:

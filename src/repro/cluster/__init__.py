@@ -15,9 +15,10 @@ draw-for-draw. See DESIGN.md §10 for the event encoding and capacity model.
 """
 from .admission import (AdmissionConfig, GovernorConfig, admit_jobs,
                         apply_governor, offered_load)
-from .engine import (ALL_STRATEGIES, ClusterOutput, QueueMetrics, replay,
-                     run_cluster, run_cluster_strategy)
-from .events import AttemptTable, Realized, dispatch_scan, predicted_holds, \
-    realize
-from .slots import DISCIPLINES, SlotPool, dispatch_order, make_pool, \
-    utilization
+from .engine import (ALL_STRATEGIES, ClusterOutput, QueueMetrics,
+                     build_strategy_table, replay, run_cluster,
+                     run_cluster_strategy)
+from .events import AttemptTable, Realized, dispatch_scan, masked_dispatch, \
+    predicted_holds, realize
+from .slots import DISCIPLINES, SlotPool, dispatch_key_order, \
+    dispatch_order, make_pool, utilization

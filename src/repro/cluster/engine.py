@@ -14,26 +14,35 @@ Replay is a small fixed-point relaxation (default 2 passes):
           (tau_est checks / launch ranks follow the primary's actual start)
           and reschedules the combined unit set in dispatch order.
 
-Every pass is one `dispatch_scan` (jax.lax.scan over the slot pool); there is
-no Python event loop on the hot path.
+The whole replay is ONE compiled program (`backend="jit"`, the default):
+every pass is a fused `masked_dispatch` (stable key sort + slot-pool scan +
+unsort, all inside jit), the relaxation is a `lax.fori_loop` over those
+passes, and `run_cluster_strategy` compiles solve -> build -> replay ->
+metrics end-to-end per strategy with zero host round-trips. Monte-Carlo
+replications (`reps=`) vmap over split keys inside the same program. The
+original host-orchestrated path (numpy flatnonzero/argsort compaction, one
+device launch per pass) survives behind `backend="host"` as the equivalence
+oracle.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.optimizer import solve_batch
+from ..core.optimizer import solve_batch_jit
 from ..sim.metrics import SimResult, aggregate, net_utility
-from ..sim.runner import jobspecs_of
+from ..sim.runner import jobspecs_of, mean_over_reps
 from ..sim.strategies import SimParams, _detect, _pareto, _rank_among_job
-from ..sim.trace import JobSet
+from ..sim.trace import JobSet, jobset_arrays, jobset_of
 from .admission import (AdmissionConfig, GovernorConfig, admit_jobs,
                         apply_governor)
-from .events import AttemptTable, dispatch_scan, predicted_holds, realize
-from .slots import dispatch_order, make_pool, utilization
+from .events import (AttemptTable, dispatch_scan, masked_dispatch,
+                     predicted_holds, realize)
+from .slots import DISCIPLINES, dispatch_order, make_pool, utilization
 
 ALL_STRATEGIES = ("hadoop_ns", "hadoop_s", "mantri",
                   "clone", "srestart", "sresume")
@@ -203,6 +212,21 @@ BASELINE_BUILDERS = {
     "hadoop_ns": build_hadoop_ns, "hadoop_s": build_hadoop_s,
     "mantri": build_mantri,
 }
+# static mirror of each builder's returned `race` flag (losers of a race
+# strategy hold their slot until the task completes)
+RACE = {"hadoop_ns": False, "hadoop_s": True, "mantri": True,
+        "clone": False, "srestart": False, "sresume": False}
+
+
+def build_strategy_table(key, jobs: JobSet, strategy: str, p: SimParams,
+                         theta=1e-4, r_min=0.0, max_r: int = 8):
+    """(AttemptTable, race) for a strategy at its solved r* — the shared
+    entry point for benchmarks and the replay-equivalence tests."""
+    if strategy in BASELINE_BUILDERS:
+        return BASELINE_BUILDERS[strategy](key, jobs, p)
+    specs = jobspecs_of(jobs, p, theta, r_min)
+    r_j, _, _, _ = solve_batch_jit(strategy, specs, max_r + 1)
+    return BUILDERS[strategy](key, jobs, r_j[jobs.job_id], p, max_r=max_r)
 
 
 # ---------------------------------------------------------------------------
@@ -210,25 +234,98 @@ BASELINE_BUILDERS = {
 # ---------------------------------------------------------------------------
 
 
-def replay(table: AttemptTable, race: bool, jobs: JobSet,
-           slots: Optional[int], discipline: str = "fifo", passes: int = 2):
-    """Replay an AttemptTable through the slot pool; see module docstring.
+def _replay_body(table: AttemptTable, race: bool, arrival, D,
+                 slots: Optional[int], discipline: str, passes: int,
+                 n_tasks: int, count_bound=None):
+    """Pure-JAX replay: traceable end-to-end, zero host round-trips.
 
-    `passes` counts scheduling passes total: pass 1 is primaries-only, so at
-    least one combined pass (passes >= 2) is required for speculative units
-    to ever acquire a slot.
+    Pass 1 dispatches primaries only (static-shape masking, not compaction);
+    the primaries-then-combined relaxation is a fori_loop whose carry is
+    (release, start). The release the FINAL pass dispatched against is the
+    one returned — it is only refreshed while another pass will consume it,
+    so wait = start - release reports true queueing (host-path invariant).
     """
-    if passes < 2:
-        raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
-                         f"only), got {passes}")
-    T = jobs.total_tasks
-    sched_hold = predicted_holds(table, race, T)
-    arrival_u = jobs.arrival[table.job_id]
+    sched_hold = predicted_holds(table, race, n_tasks)
+    arrival_u = arrival[table.job_id]
 
     if slots is None:
         release = arrival_u + table.rel_offset
         start = release
-        return realize(table, release, start, sched_hold, race, T), release, start
+        return (realize(table, release, start, sched_hold, race, n_tasks),
+                release, start)
+
+    deadline_u = (arrival + D)[table.job_id]
+    U = table.task_id.shape[0]
+    assert U % n_tasks == 0, (
+        f"AttemptTable must be attempt-major with a uniform width "
+        f"(U={U} not divisible by T={n_tasks}); see _assemble")
+    A = U // n_tasks
+    # _assemble's layout contract: row t*A + a is attempt a of task t, and
+    # attempt 0 is the primary — so pass 1 (primaries only) runs on a T-row
+    # slice; sorting the full U-row table for it would cost A x more.
+    col0 = lambda x: x.reshape(n_tasks, A)[:, 0]
+    act_prim_t = col0(table.active & table.is_primary)
+    starts_t = masked_dispatch(slots, discipline, col0(arrival_u),
+                               col0(sched_hold), act_prim_t,
+                               col0(deadline_u), count_bound=n_tasks)
+    prim_start = jnp.where(act_prim_t, starts_t, 0.0)       # (T,)
+    release0 = jnp.where(table.is_primary, arrival_u,
+                         prim_start[table.task_id] + table.rel_offset)
+    starts0 = jnp.where(table.is_primary,
+                        starts_t[table.task_id], arrival_u)
+
+    def combined_pass(i, carry):
+        rel, _ = carry
+        st = masked_dispatch(slots, discipline, rel, sched_hold,
+                             table.active, deadline_u,
+                             count_bound=count_bound)
+        ps = jnp.where(act_prim_t, col0(st), 0.0)
+        refreshed = jnp.where(table.is_primary, arrival_u,
+                              ps[table.task_id] + table.rel_offset)
+        return jnp.where(i < passes - 2, refreshed, rel), st
+
+    release, start = jax.lax.fori_loop(0, passes - 1, combined_pass,
+                                       (release0, starts0))
+    return (realize(table, release, start, sched_hold, race, n_tasks),
+            release, start)
+
+
+@functools.partial(jax.jit, static_argnames=("race", "slots", "discipline",
+                                             "passes", "n_tasks"))
+def _replay_jit(table: AttemptTable, arrival, D, *, race: bool,
+                slots: Optional[int], discipline: str, passes: int,
+                n_tasks: int):
+    return _replay_body(table, race, arrival, D, slots, discipline, passes,
+                        n_tasks)
+
+
+def replay(table: AttemptTable, race: bool, jobs: JobSet,
+           slots: Optional[int], discipline: str = "fifo", passes: int = 2,
+           backend: str = "jit"):
+    """Replay an AttemptTable through the slot pool; see module docstring.
+
+    `passes` counts scheduling passes total: pass 1 is primaries-only, so at
+    least one combined pass (passes >= 2) is required for speculative units
+    to ever acquire a slot. backend="jit" runs the whole replay as one
+    compiled program; backend="host" is the legacy host-orchestrated path
+    (kept as the equivalence oracle — see tests/test_cluster.py).
+    """
+    if passes < 2:
+        raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
+                         f"only), got {passes}")
+    if discipline not in DISCIPLINES:
+        raise ValueError(f"unknown discipline {discipline!r}; "
+                         f"expected one of {DISCIPLINES}")
+    if backend not in ("jit", "host"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected 'jit' or 'host'")
+    T = jobs.total_tasks
+    if slots is None or backend == "jit":
+        return _replay_jit(table, jobs.arrival, jobs.D, race=race,
+                           slots=slots, discipline=discipline, passes=passes,
+                           n_tasks=T)
+    sched_hold = predicted_holds(table, race, T)
+    arrival_u = jobs.arrival[table.job_id]
 
     # host-side orchestration: compact to active units, scan per pass
     tid = np.asarray(table.task_id)
@@ -279,52 +376,140 @@ def replay(table: AttemptTable, race: bool, jobs: JobSet,
 # ---------------------------------------------------------------------------
 
 
+def _narrow_table(table: AttemptTable, n_tasks: int,
+                  width: Optional[int]) -> AttemptTable:
+    """Drop trailing attempt columns that can never dispatch.
+
+    Builders materialize `max_r`-wide tables so the PRNG draw shapes (and
+    hence draw-for-draw equivalence with the flat simulator) never depend
+    on the solved r*; but every unit-indexed replay op — the dispatch-order
+    sort above all — costs O(U = T * width). Slicing the (T, A) table to
+    the first `width` attempt columns after the draws is exact whenever
+    width > max(r*) + 1: the dropped rows are active=False for every task.
+    """
+    U = table.task_id.shape[0]
+    A = U // n_tasks
+    if width is None or width >= A:
+        return table
+    sl = lambda x: x.reshape(n_tasks, A)[:, :width].reshape(-1)
+    return AttemptTable(*(sl(x) for x in table))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_jobs", "strategy", "p", "slots", "discipline", "passes", "max_r",
+    "oracle", "reps", "width"))
+def _cluster_core(key, arrays, theta, r_min, r_j, th_p, th_c, admitted, *,
+                  n_jobs: int, strategy: str, p: SimParams,
+                  slots: Optional[int], discipline: str, passes: int,
+                  max_r: int, oracle: bool, reps: int,
+                  width: Optional[int]) -> ClusterOutput:
+    """Single compiled program per strategy: table build, capacity replay,
+    and metric reductions, with `reps` MC replications vmapped over split
+    keys. r* enters as data (solved once per call by the cached
+    `solve_batch_jit` entry in the wrapper — it is replication-invariant
+    and its max also fixes the static table width)."""
+    jobs = jobset_of(n_jobs, arrays)
+    J = jobs.n_jobs
+    T = jobs.total_tasks
+    if r_j is None:
+        r_j = jnp.zeros((J,), jnp.int32)
+        th_p = jnp.zeros((J,))
+        th_c = jnp.zeros((J,))
+
+    admitted_frac = (jnp.float32(1.0) if admitted is None
+                     else jnp.mean(admitted.astype(jnp.float32)))
+
+    def build_rep(k):
+        if strategy in BASELINE_BUILDERS:
+            table, race = BASELINE_BUILDERS[strategy](k, jobs, p)
+        else:
+            table, race = BUILDERS[strategy](k, jobs, r_j[jobs.job_id], p,
+                                             max_r=max_r, oracle=oracle)
+        assert race == RACE[strategy], (strategy, race)
+        if admitted is not None:
+            table = table._replace(
+                active=table.active & admitted[table.job_id])
+        return _narrow_table(table, T, width)
+
+    def replay_rep(table, race, count_bound):
+        realized, release, start = _replay_body(
+            table, race, jobs.arrival, jobs.D, slots, discipline, passes, T,
+            count_bound=count_bound)
+        completion_rel = realized.task_completion - jobs.arrival[jobs.job_id]
+        res = aggregate(jobs, completion_rel, realized.task_machine)
+        n_active = jnp.maximum(jnp.sum(table.active.astype(jnp.float32)), 1.0)
+        util = (utilization(realized.busy_time, slots, realized.span)
+                if slots is not None else jnp.float32(0.0))
+        queue = QueueMetrics(
+            mean_wait=jnp.sum(realized.wait) / n_active,
+            max_wait=jnp.max(realized.wait),
+            utilization=util, preempted=realized.preempted,
+            admitted_frac=admitted_frac, slots=None)
+        return res, queue
+
+    race = RACE[strategy]
+    if reps == 1:
+        res, queue = replay_rep(build_rep(key), race, None)
+    else:
+        # Build all replications first, then hoist ONE active-count bound
+        # (max over reps) shared by every replay: a per-rep (batched) bound
+        # would turn the block-skip cond into both-branch execution under
+        # vmap and re-serialize the full table (see dispatch_prefix_scan).
+        tables = jax.vmap(build_rep)(jax.random.split(key, reps))
+        count_bound = jnp.max(jnp.sum(tables.active.astype(jnp.int32),
+                                      axis=1))
+        res, queue = mean_over_reps(
+            jax.vmap(lambda t: replay_rep(t, race, count_bound))(tables))
+    return ClusterOutput(
+        result=res, r_opt=r_j,
+        utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
+        theory_pocd=th_p, theory_cost=th_c, queue=queue)
+
+
 def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
                          slots: Optional[int] = None, theta=1e-4, r_min=0.0,
                          max_r: int = 8, oracle: bool = True,
                          discipline: str = "fifo", passes: int = 2,
                          governor: Optional[GovernorConfig] = None,
-                         admitted: Optional[np.ndarray] = None
-                         ) -> ClusterOutput:
-    J = jobs.n_jobs
-    if strategy in BASELINE_BUILDERS:
-        table, race = BASELINE_BUILDERS[strategy](key, jobs, p)
-        r_j = jnp.zeros((J,), jnp.int32)
-        th_p = jnp.zeros((J,))
-        th_c = jnp.zeros((J,))
-    else:
-        specs = jobspecs_of(jobs, p, theta, r_min)
+                         admitted: Optional[np.ndarray] = None,
+                         reps: int = 1, width="auto") -> ClusterOutput:
+    """Two cached jit entries per strategy — the Algorithm-1 solve and the
+    build->replay->metrics program — with no host<->device transfer inside
+    the replay. Governor/admission stay host-side trace preprocessing
+    (numpy cumsum/searchsorted over arrivals); their outputs enter the
+    compiled program as plain arrays.
+
+    width="auto" narrows the attempt table to max(r*) + 2 columns before
+    the replay (one scalar read of the solve output fixes the static shape;
+    the PRNG draws are unaffected, see _narrow_table). Pass width=None to
+    keep the full max_r-wide table — e.g. to run strictly
+    solve->replay-fused with zero intermediate syncs. With reps>1 the
+    SimResult/QueueMetrics are MC means over replications (job_met becomes
+    a met frequency)."""
+    if passes < 2:
+        raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
+                         f"only), got {passes}")
+    if discipline not in DISCIPLINES:
+        raise ValueError(f"unknown discipline {discipline!r}; "
+                         f"expected one of {DISCIPLINES}")
+    r_j = th_p = th_c = None
+    if strategy not in BASELINE_BUILDERS:
+        specs = jobspecs_of(jobs, p, jnp.float32(theta), jnp.float32(r_min))
         if governor is not None and slots is not None:
             specs = apply_governor(specs, jobs, slots, governor)
-        r_j, _, th_p, th_c = solve_batch(strategy, specs, r_max=max_r + 1)
+        r_j, _, th_p, th_c = solve_batch_jit(strategy, specs, max_r + 1)
         th_c = th_c * specs.C
-        r_task = r_j[jobs.job_id]
-        table, race = BUILDERS[strategy](key, jobs, r_task, p, max_r=max_r,
-                                         oracle=oracle)
-
-    admitted_frac = jnp.float32(1.0)
-    if admitted is not None:
-        adm = jnp.asarray(admitted)
-        table = table._replace(active=table.active & adm[table.job_id])
-        admitted_frac = jnp.mean(adm.astype(jnp.float32))
-
-    realized, release, start = replay(table, race, jobs, slots,
-                                      discipline=discipline, passes=passes)
-    completion_rel = realized.task_completion - jobs.arrival[jobs.job_id]
-    res = aggregate(jobs, completion_rel, realized.task_machine)
-
-    n_active = jnp.maximum(jnp.sum(table.active.astype(jnp.float32)), 1.0)
-    util = (utilization(realized.busy_time, slots, realized.span)
-            if slots is not None else jnp.float32(0.0))
-    queue = QueueMetrics(
-        mean_wait=jnp.sum(realized.wait) / n_active,
-        max_wait=jnp.max(realized.wait),
-        utilization=util, preempted=realized.preempted,
-        admitted_frac=admitted_frac, slots=slots)
-    return ClusterOutput(
-        result=res, r_opt=r_j,
-        utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
-        theory_pocd=th_p, theory_cost=th_c, queue=queue)
+        if width == "auto":
+            width = int(jnp.max(r_j)) + 2
+    if width == "auto":
+        width = None            # baselines are already minimal-width
+    adm = None if admitted is None else jnp.asarray(admitted)
+    out = _cluster_core(
+        key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
+        r_j, th_p, th_c, adm, n_jobs=jobs.n_jobs, strategy=strategy, p=p,
+        slots=slots, discipline=discipline, passes=passes, max_r=max_r,
+        oracle=oracle, reps=reps, width=width)
+    return out._replace(queue=out.queue._replace(slots=slots))
 
 
 def run_cluster(key, jobs: JobSet, p: SimParams, slots: Optional[int] = None,
@@ -333,7 +518,8 @@ def run_cluster(key, jobs: JobSet, p: SimParams, slots: Optional[int] = None,
                 oracle: bool = True, discipline: str = "fifo",
                 passes: int = 2,
                 governor: Optional[GovernorConfig] = None,
-                admission: Optional[AdmissionConfig] = None):
+                admission: Optional[AdmissionConfig] = None,
+                reps: int = 1):
     """Finite-capacity mirror of `sim.runner.run_all`.
 
     Returns (outs, r_min) where outs maps strategy -> ClusterOutput. With
@@ -346,7 +532,7 @@ def run_cluster(key, jobs: JobSet, p: SimParams, slots: Optional[int] = None,
         admitted = admit_jobs(jobs, slots, admission)
     kw = dict(slots=slots, theta=theta, max_r=max_r, oracle=oracle,
               discipline=discipline, passes=passes, governor=governor,
-              admitted=admitted)
+              admitted=admitted, reps=reps)
     outs = {}
     r_min = 0.0
     for k, name in zip(keys, strategies):

@@ -31,7 +31,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .slots import SlotPool
+from .slots import SlotPool, dispatch_key_order, make_pool
 
 
 class AttemptTable(NamedTuple):
@@ -92,6 +92,27 @@ def predicted_holds(table: AttemptTable, race: bool, n_tasks: int):
     return jnp.where(table.active, hold, 0.0)
 
 
+def _pool_step(state, x):
+    """One dispatch event: earliest-idle slot via the two-level argmin;
+    inactive units pass through without touching pool state."""
+    free, gmin = state
+    rel, h, act = x
+    gi = jnp.argmin(gmin)
+    row = free[gi]
+    si = jnp.argmin(row)
+    start = jnp.maximum(rel, row[si])
+    new_row = row.at[si].set(start + h)
+    free = jnp.where(act, free.at[gi].set(new_row), free)
+    gmin = jnp.where(act, gmin.at[gi].set(jnp.min(new_row)), gmin)
+    return (free, gmin), jnp.where(act, start, rel)
+
+
+# body unrolling amortizes XLA's per-iteration loop overhead over several
+# inherently-sequential dispatch events (~20% on CPU; the recursion itself
+# cannot be parallelized)
+_UNROLL = 4
+
+
 @partial(jax.jit, donate_argnums=())
 def dispatch_scan(pool: SlotPool, release, hold, active):
     """The event loop: offer each unit (in dispatch order) the earliest-idle
@@ -101,21 +122,83 @@ def dispatch_scan(pool: SlotPool, release, hold, active):
     Returns (pool', start_times). Exact G/G/K FIFO when units are sorted by
     release; strict-priority EDF when sorted by deadline (slots.py).
     """
-    def step(state, x):
+    (free, gmin), starts = jax.lax.scan(
+        _pool_step, (pool.free, pool.gmin), (release, hold, active),
+        unroll=_UNROLL)
+    return SlotPool(free=free, gmin=gmin), starts
+
+
+def dispatch_prefix_scan(pool: SlotPool, release, hold, count,
+                         chunk: int = 2048, count_bound=None):
+    """dispatch_scan over the first `count` (traced) rows of a sorted array.
+
+    The serial slot recursion costs one step per row it visits, so visiting
+    the (usually sparse) active units only — not the full U-row table — is
+    what keeps the compiled replay at host-path step counts. A lax.cond per
+    `chunk`-sized block skips fully-inactive blocks, giving a data-dependent
+    trip count under static shapes while the inner unrolled lax.scan keeps
+    per-event cost at dispatch_scan levels; rows past `count` keep their
+    release as their start (pass-through semantics).
+
+    `count_bound` (>= count) optionally replaces `count` in the skip
+    predicate. Under vmap, a batched predicate would collapse the cond to
+    "execute both branches", re-serializing every block; a bound that is
+    shared across the batch (e.g. the max active count over Monte-Carlo
+    replications) keeps the predicate unbatched and the skip real.
+    """
+    U = release.shape[0]
+    pad = (-U) % chunk
+    if pad:
+        release = jnp.concatenate(
+            [release, jnp.full((pad,), jnp.inf, release.dtype)])
+        hold = jnp.concatenate([hold, jnp.zeros((pad,), hold.dtype)])
+    n_chunks = (U + pad) // chunk
+    lane = jnp.arange(chunk, dtype=jnp.int32)
+    bases = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    bound = count if count_bound is None else count_bound
+
+    def outer(state, xs):
         free, gmin = state
-        rel, h, act = x
-        gi = jnp.argmin(gmin)
-        row = free[gi]
-        si = jnp.argmin(row)
-        start = jnp.maximum(rel, row[si])
-        new_row = row.at[si].set(start + h)
-        free = jnp.where(act, free.at[gi].set(new_row), free)
-        gmin = jnp.where(act, gmin.at[gi].set(jnp.min(new_row)), gmin)
-        return (free, gmin), jnp.where(act, start, rel)
+        rel_c, hold_c, base = xs
+
+        def run(_):
+            act_c = base + lane < count
+            return jax.lax.scan(_pool_step, (free, gmin),
+                                (rel_c, hold_c, act_c), unroll=_UNROLL)
+
+        def skip(_):
+            return (free, gmin), rel_c
+
+        (free2, gmin2), st_c = jax.lax.cond(base < bound, run, skip, None)
+        return (free2, gmin2), st_c
 
     (free, gmin), starts = jax.lax.scan(
-        step, (pool.free, pool.gmin), (release, hold, active))
-    return SlotPool(free=free, gmin=gmin), starts
+        outer, (pool.free, pool.gmin),
+        (release.reshape(n_chunks, chunk), hold.reshape(n_chunks, chunk),
+         bases))
+    return SlotPool(free=free, gmin=gmin), starts.reshape(-1)[:U]
+
+
+def masked_dispatch(slots: int, discipline: str, release, hold, active,
+                    deadline_abs, count_bound=None):
+    """One fully-traceable scheduling pass over ALL units.
+
+    Static-shape masked compaction: instead of host-side `np.flatnonzero`
+    subsets, one stable key sort with inactive units pushed to +inf packs
+    active units into a dispatch-ordered prefix (their relative order is
+    exactly the host path's subset order), and the slot recursion walks
+    only that prefix — the whole pass (key sort, prefix scan, unsort) stays
+    inside one compiled program. `count_bound`: see dispatch_prefix_scan.
+
+    Returns (U,) start times; inactive units report their release.
+    """
+    order = dispatch_key_order(discipline, release, deadline_abs,
+                               inactive=~active)
+    count = jnp.sum(active.astype(jnp.int32))
+    pool = make_pool(slots, t0=0.0)
+    _, starts_sorted = dispatch_prefix_scan(
+        pool, release[order], hold[order], count, count_bound=count_bound)
+    return jnp.zeros_like(release).at[order].set(starts_sorted)
 
 
 def realize(table: AttemptTable, release, start, sched_hold, race: bool,

@@ -51,11 +51,36 @@ def make_pool(slots: int, t0: float = 0.0) -> SlotPool:
 
 def dispatch_order(discipline: str, release: np.ndarray,
                    deadline_abs: np.ndarray) -> np.ndarray:
-    """Permutation that sorts attempt-units into dispatch order."""
+    """Permutation that sorts attempt-units into dispatch order (host path)."""
     if discipline == "fifo":
         return np.argsort(release, kind="stable")
     if discipline == "edf":
         return np.lexsort((release, deadline_abs))
+    raise ValueError(f"unknown discipline {discipline!r}; "
+                     f"expected one of {DISCIPLINES}")
+
+
+def dispatch_key_order(discipline: str, release, deadline_abs,
+                       inactive=None):
+    """Traceable twin of `dispatch_order`: both disciplines reduce to one
+    stable lexicographic key sort, so dispatch ordering happens inside jit
+    with no host round-trip. Ties break by unit index (stable), matching the
+    host path's argsort/lexsort exactly. With `inactive` (bool mask), the
+    most-significant key of inactive units is forced to +inf so active units
+    pack into a dispatch-ordered prefix — the static-shape replacement for
+    host-side flatnonzero compaction (exact because active releases and
+    deadlines are always finite; one fewer stable sort pass than an extra
+    boolean key)."""
+    if discipline == "fifo":
+        key = release
+        if inactive is not None:
+            key = jnp.where(inactive, jnp.inf, key)
+        return jnp.argsort(key, stable=True)
+    if discipline == "edf":
+        key = deadline_abs
+        if inactive is not None:
+            key = jnp.where(inactive, jnp.inf, key)
+        return jnp.lexsort((release, key))
     raise ValueError(f"unknown discipline {discipline!r}; "
                      f"expected one of {DISCIPLINES}")
 

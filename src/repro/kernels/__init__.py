@@ -4,4 +4,4 @@ flash_attention — tiled online-softmax attention for the serving/train path.
 Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py.
 """
 from . import ops, ref
-from .ops import pocd_mc, attention
+from .ops import MODES, pocd_mc, pocd_mc_all, attention

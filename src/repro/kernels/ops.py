@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .pocd_mc import pocd_mc_pallas, JOB_TILE
+from .pocd_mc import pocd_mc_pallas, pocd_mc_all_pallas, JOB_TILE, MODES
 from .flash_attention import flash_attention
 
 
@@ -25,21 +25,29 @@ def pocd_mc(u, t_min, beta, D, r, mode="clone", tau_est_frac=0.3,
             tau_kill_gap_frac=0.5, phi=0.25):
     """Monte-Carlo PoCD + cost for a batch of uniform-N jobs.
 
-    Pads the job dim to the kernel tile. Returns (met (J,), cost (J,)).
+    Returns (met (J,), cost (J,)). Partial job tiles are masked inside the
+    kernel, so no padding copy of the (J, N, R) uniforms is ever made.
     """
-    J = u.shape[0]
-    pad = (-J) % JOB_TILE
-    if pad:
-        u = jnp.pad(u, ((0, pad), (0, 0), (0, 0)), constant_values=0.5)
-        t_min = jnp.pad(t_min, (0, pad), constant_values=1.0)
-        beta = jnp.pad(beta, (0, pad), constant_values=2.0)
-        D = jnp.pad(D, (0, pad), constant_values=1e9)
-        r = jnp.pad(r, (0, pad))
-    met, cost = pocd_mc_pallas(u, t_min, beta, D, r, mode=mode,
-                               tau_est_frac=tau_est_frac,
-                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
-                               interpret=_default_interpret())
-    return met[:J], cost[:J]
+    return pocd_mc_pallas(u, t_min, beta, D, r, mode=mode,
+                          tau_est_frac=tau_est_frac,
+                          tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
+                          interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("tau_est_frac",
+                                             "tau_kill_gap_frac", "phi"))
+def pocd_mc_all(u, t_min, beta, D, r_modes, tau_est_frac=0.3,
+                tau_kill_gap_frac=0.5, phi=0.25):
+    """Fused Monte-Carlo sweep over all strategy modes in one grid pass.
+
+    r_modes: (len(MODES), J) int32 — per-mode r* rows in `MODES` order
+    (clone, srestart, sresume). Shares one uniform -> Pareto transform
+    across modes; returns (met (M, J), cost (M, J)).
+    """
+    return pocd_mc_all_pallas(u, t_min, beta, D, r_modes,
+                              tau_est_frac=tau_est_frac,
+                              tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
+                              interpret=_default_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "softcap", "block_q",

@@ -7,6 +7,18 @@ all-tasks-before-deadline indicator + total machine time. One grid step
 processes a tile of jobs; the (jobs_tile, n_tasks, max_attempts) working set
 lives in VMEM (128 x 64 x 8 f32 = 256 KiB).
 
+Two entry points share the strategy bodies (`_strategy_outcome`):
+
+  * `pocd_mc_pallas`     — one mode per launch.
+  * `pocd_mc_all_pallas` — all three modes in ONE grid pass: the
+    uniform -> Pareto transform (the exp/log half of the FLOPs) is computed
+    once and reused, where three separate launches would redo it per mode.
+
+Neither requires J to divide the job tile: the grid covers ceil(J / tile)
+steps and the last partial tile is masked in-kernel (lanes past J write 0),
+so callers never pad the (J, N, R) uniforms and short batches stop paying
+for a full ghost tile.
+
 Used by the governor's empirical PoCD cross-check and by benchmarks; the
 ragged-trace path uses the segment-reduction JAX implementation (sim/), and
 `ref.py` holds the pure-jnp oracle this kernel is tested against.
@@ -26,25 +38,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 JOB_TILE = 128
+MODES = ("clone", "srestart", "sresume")
 
 
-def _kernel(u_ref, tmin_ref, beta_ref, D_ref, r_ref, met_ref, cost_ref, *,
-            mode: str, tau_est_frac: float, tau_kill_gap_frac: float,
-            phi: float):
-    u = u_ref[...]                    # (Jt, N, R)
-    t_min = tmin_ref[...][:, None, None]
-    beta = beta_ref[...][:, None, None]
-    D = D_ref[...][:, None]           # (Jt, 1)
-    r = r_ref[...][:, None]           # (Jt, 1) int32
-    Jt, N, R = u.shape
+def _strategy_outcome(att, t_min, tau_est, tau_kill, D, r, *, mode: str,
+                      phi: float):
+    """(completion, machine), both (Jt, N), from shared Pareto draws.
 
-    tau_est = tau_est_frac * t_min[:, :, 0]
-    tau_kill = tau_est + tau_kill_gap_frac * t_min[:, :, 0]
-
-    att = t_min * jnp.exp(-jnp.log(u) / beta)     # Pareto via u^(-1/beta)
-    slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R), 2)
+    att: (Jt, N, R) attempt times; t_min: (Jt, 1, 1); tau_est/tau_kill:
+    (Jt, N); D/r: (Jt, 1).
+    """
+    Jt, N, R = att.shape
 
     if mode == "clone":
+        slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R), 2)
         active = slot <= r[:, :, None]
         best = jnp.min(jnp.where(active, att, jnp.inf), axis=2)
         completion = best
@@ -61,7 +68,7 @@ def _kernel(u_ref, tmin_ref, beta_ref, D_ref, r_ref, met_ref, cost_ref, *,
         machine = jnp.where(
             use, tau_est + r.astype(att.dtype) * (tau_kill - tau_est) + w_all,
             T1)
-    else:  # sresume
+    elif mode == "sresume":
         T1 = att[:, :, 0]
         strag = T1 > D
         resumed = jnp.maximum(t_min, (1.0 - phi) * att[:, :, 1:])
@@ -72,25 +79,82 @@ def _kernel(u_ref, tmin_ref, beta_ref, D_ref, r_ref, met_ref, cost_ref, *,
         machine = jnp.where(
             strag, tau_est + r.astype(att.dtype) * (tau_kill - tau_est) + w_new,
             T1)
+    else:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    return completion, machine
 
-    met_ref[...] = jnp.all(completion <= D, axis=1).astype(jnp.float32)
-    cost_ref[...] = jnp.sum(machine, axis=1)
+
+def _tile_prelude(u_ref, tmin_ref, beta_ref, D_ref, n_jobs: int):
+    """Shared per-tile setup: Pareto transform + partial-tile lane mask."""
+    u = u_ref[...]                    # (Jt, N, R)
+    t_min = tmin_ref[...][:, None, None]
+    beta = beta_ref[...][:, None, None]
+    D = D_ref[...][:, None]           # (Jt, 1)
+    Jt = u.shape[0]
+
+    tau_est_base = t_min[:, :, 0]     # (Jt, 1), scaled by fracs below
+    att = t_min * jnp.exp(-jnp.log(u) / beta)     # Pareto via u^(-1/beta)
+    if n_jobs % Jt == 0:
+        valid = None                  # every tile is full: no masking cost
+    else:
+        lane = jax.lax.broadcasted_iota(jnp.int32, (Jt, 1), 0)[:, 0]
+        valid = pl.program_id(0) * Jt + lane < n_jobs  # (Jt,)
+    return att, t_min, tau_est_base, D, valid
+
+
+def _kernel(u_ref, tmin_ref, beta_ref, D_ref, r_ref, met_ref, cost_ref, *,
+            mode: str, tau_est_frac: float, tau_kill_gap_frac: float,
+            phi: float, n_jobs: int):
+    att, t_min, tm2, D, valid = _tile_prelude(u_ref, tmin_ref, beta_ref,
+                                              D_ref, n_jobs)
+    tau_est = tau_est_frac * tm2
+    tau_kill = tau_est + tau_kill_gap_frac * tm2
+    r = r_ref[...][:, None]           # (Jt, 1) int32
+    completion, machine = _strategy_outcome(
+        att, t_min, tau_est, tau_kill, D, r, mode=mode, phi=phi)
+    met = jnp.all(completion <= D, axis=1).astype(jnp.float32)
+    cost = jnp.sum(machine, axis=1)
+    met_ref[...] = met if valid is None else jnp.where(valid, met, 0.0)
+    cost_ref[...] = cost if valid is None else jnp.where(valid, cost, 0.0)
+
+
+def _kernel_all(u_ref, tmin_ref, beta_ref, D_ref, r_ref, met_ref, cost_ref,
+                *, tau_est_frac: float, tau_kill_gap_frac: float, phi: float,
+                n_jobs: int):
+    """Fused multi-mode pass: one Pareto transform feeds all three
+    strategies; met/cost land in (n_modes, Jt) output tiles."""
+    att, t_min, tm2, D, valid = _tile_prelude(u_ref, tmin_ref, beta_ref,
+                                              D_ref, n_jobs)
+    tau_est = tau_est_frac * tm2
+    tau_kill = tau_est + tau_kill_gap_frac * tm2
+    for m, mode in enumerate(MODES):
+        r = r_ref[...][m][:, None]    # (Jt, 1) int32
+        completion, machine = _strategy_outcome(
+            att, t_min, tau_est, tau_kill, D, r, mode=mode, phi=phi)
+        met = jnp.all(completion <= D, axis=1).astype(jnp.float32)
+        cost = jnp.sum(machine, axis=1)
+        met_ref[m, :] = met if valid is None else jnp.where(valid, met, 0.0)
+        cost_ref[m, :] = cost if valid is None else jnp.where(valid, cost, 0.0)
+
+
+def _grid_of(J: int):
+    return ((J + JOB_TILE - 1) // JOB_TILE,)
 
 
 def pocd_mc_pallas(u, t_min, beta, D, r, *, mode="clone", tau_est_frac=0.3,
                    tau_kill_gap_frac=0.5, phi=0.25, interpret=True):
     """u: (J, N, R) uniforms; per-job t_min/beta/D (J,), r (J,) int32.
 
-    Returns (met (J,) f32, cost (J,) f32). J must be a multiple of JOB_TILE.
+    Returns (met (J,) f32, cost (J,) f32). Any J: partial tiles are masked
+    in-kernel, no padding required.
     """
     J, N, R = u.shape
-    assert J % JOB_TILE == 0, f"J={J} must divide the {JOB_TILE} job tile"
-    grid = (J // JOB_TILE,)
     kernel = functools.partial(_kernel, mode=mode, tau_est_frac=tau_est_frac,
-                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi)
+                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
+                               n_jobs=J)
     met, cost = pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=_grid_of(J),
         in_specs=[
             pl.BlockSpec((JOB_TILE, N, R), lambda i: (i, 0, 0)),
             pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
@@ -108,4 +172,41 @@ def pocd_mc_pallas(u, t_min, beta, D, r, *, mode="clone", tau_est_frac=0.3,
         ],
         interpret=interpret,
     )(u, t_min, beta, D, r)
+    return met, cost
+
+
+def pocd_mc_all_pallas(u, t_min, beta, D, r_modes, *, tau_est_frac=0.3,
+                       tau_kill_gap_frac=0.5, phi=0.25, interpret=True):
+    """Fused sweep: u (J, N, R) uniforms shared across modes, r_modes
+    (n_modes, J) int32 with one r* row per mode in `MODES` order.
+
+    Returns (met (n_modes, J), cost (n_modes, J)) — one kernel launch, one
+    Pareto transform, three strategy evaluations.
+    """
+    J, N, R = u.shape
+    M = len(MODES)
+    assert r_modes.shape == (M, J), r_modes.shape
+    kernel = functools.partial(_kernel_all, tau_est_frac=tau_est_frac,
+                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
+                               n_jobs=J)
+    met, cost = pl.pallas_call(
+        kernel,
+        grid=_grid_of(J),
+        in_specs=[
+            pl.BlockSpec((JOB_TILE, N, R), lambda i: (i, 0, 0)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((JOB_TILE,), lambda i: (i,)),
+            pl.BlockSpec((M, JOB_TILE), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((M, JOB_TILE), lambda i: (0, i)),
+            pl.BlockSpec((M, JOB_TILE), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, J), jnp.float32),
+            jax.ShapeDtypeStruct((M, J), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, t_min, beta, D, r_modes)
     return met, cost

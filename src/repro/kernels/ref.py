@@ -50,6 +50,19 @@ def pocd_mc_ref(u, t_min, beta, D, r, *, mode="clone", tau_est_frac=0.3,
     return met, cost
 
 
+def pocd_mc_all_ref(u, t_min, beta, D, r_modes, *, tau_est_frac=0.3,
+                    tau_kill_gap_frac=0.5, phi=0.25):
+    """Oracle for kernels.pocd_mc_all — per-mode pocd_mc_ref, stacked."""
+    mets, costs = [], []
+    for m, mode in enumerate(("clone", "srestart", "sresume")):
+        met, cost = pocd_mc_ref(u, t_min, beta, D, r_modes[m], mode=mode,
+                                tau_est_frac=tau_est_frac,
+                                tau_kill_gap_frac=tau_kill_gap_frac, phi=phi)
+        mets.append(met)
+        costs.append(cost)
+    return jnp.stack(mets), jnp.stack(costs)
+
+
 def attention_ref(q, k, v, *, causal=True, softcap=None):
     """Oracle for kernels.flash_attention. q: (B,H,S,D); k/v: (B,K,S,D)."""
     B, H, Sq, D = q.shape

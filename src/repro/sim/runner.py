@@ -4,9 +4,17 @@ For every job in the trace the Chronos optimizer picks r* (Algorithm 1,
 vectorized exact grid solve), then the strategy simulator executes the whole
 trace and empirical PoCD / cost / net utility are aggregated — the pipeline
 behind Figures 2-5 and Tables I-II.
+
+The whole pipeline is one compiled program per strategy (`_run_core` is
+jitted with the strategy, trace shape, and SimParams static): Algorithm-1
+solve, Pareto draws, execution, and segment reductions all fuse, so repeated
+calls pay zero re-trace cost. Monte-Carlo replications vmap over split keys
+inside the same program (`reps=`), so tightening MC error multiplies only
+the on-device compute, not the dispatch.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -16,7 +24,7 @@ from ..core.utility import JobSpec
 from ..core.optimizer import solve_batch
 from . import strategies as S
 from .metrics import aggregate, net_utility, SimResult
-from .trace import JobSet
+from .trace import JobSet, jobset_arrays, jobset_of
 
 STRATEGY_SIMS = {
     "clone": S.sim_clone,
@@ -42,7 +50,7 @@ def jobspecs_of(jobs: JobSet, p: S.SimParams, theta, r_min=0.0) -> JobSpec:
     t_min = jobs.t_min
     tau_est = p.tau_est_frac * t_min
     tau_kill = tau_est + p.tau_kill_gap_frac * t_min
-    f = jnp.float32
+    f = lambda x: jnp.asarray(x, jnp.float32)
     J = jobs.n_jobs
     return JobSpec(
         t_min=f(t_min), beta=f(jobs.beta), D=f(jobs.D),
@@ -53,55 +61,96 @@ def jobspecs_of(jobs: JobSet, p: S.SimParams, theta, r_min=0.0) -> JobSpec:
         R_min=jnp.full((J,), r_min, jnp.float32))
 
 
-def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
-                 theta=1e-4, r_min=0.0, max_r: int = 8,
-                 oracle: bool = True, r_override=None) -> RunOutput:
+def _mc_exec(key, jobs: JobSet, strategy: str, r_task, p: S.SimParams,
+             max_r: int, oracle: bool) -> SimResult:
+    """One Monte-Carlo replication: draws -> execution -> job metrics."""
     if strategy in BASELINE_SIMS:
         completion, machine = BASELINE_SIMS[strategy](key, jobs, p)
-        res = aggregate(jobs, completion, machine)
-        return RunOutput(result=res, r_opt=jnp.zeros((jobs.n_jobs,), jnp.int32),
-                         utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
-                         theory_pocd=jnp.zeros((jobs.n_jobs,)),
-                         theory_cost=jnp.zeros((jobs.n_jobs,)))
+    elif strategy == "clone":
+        completion, machine = STRATEGY_SIMS[strategy](
+            key, jobs, r_task, p, max_r=max_r)
+    else:
+        completion, machine = STRATEGY_SIMS[strategy](
+            key, jobs, r_task, p, max_r=max_r, oracle=oracle)
+    return aggregate(jobs, completion, machine)
 
-    specs = jobspecs_of(jobs, p, theta, r_min)
-    if r_override is not None:
-        r_j = jnp.full((jobs.n_jobs,), r_override, jnp.int32)
-        from ..core.utility import pocd_of, cost_of
-        th_p = pocd_of(strategy, r_j.astype(jnp.float32), specs)
-        th_c = cost_of(strategy, r_j.astype(jnp.float32), specs) * specs.C
+
+def mean_over_reps(tree):
+    """Reduce a vmapped (reps, ...) metric pytree to its MC mean.
+
+    Boolean leaves (e.g. job_met) become float frequencies in [0, 1].
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0), tree)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_jobs", "strategy", "p", "max_r", "oracle", "reps"))
+def _run_core(key, arrays, theta, r_min, r_override, *, n_jobs: int,
+              strategy: str, p: S.SimParams, max_r: int, oracle: bool,
+              reps: int) -> RunOutput:
+    jobs = jobset_of(n_jobs, arrays)
+    J = jobs.n_jobs
+    if strategy in BASELINE_SIMS:
+        r_j = jnp.zeros((J,), jnp.int32)
+        th_p = jnp.zeros((J,))
+        th_c = jnp.zeros((J,))
     else:
-        r_j, _, th_p, th_c = solve_batch(strategy, specs, r_max=max_r + 1)
-        th_c = th_c * specs.C
+        specs = jobspecs_of(jobs, p, theta, r_min)
+        if r_override is not None:
+            from ..core.utility import pocd_of, cost_of
+            r_j = jnp.broadcast_to(r_override, (J,)).astype(jnp.int32)
+            th_p = pocd_of(strategy, r_j.astype(jnp.float32), specs)
+            th_c = cost_of(strategy, r_j.astype(jnp.float32), specs) * specs.C
+        else:
+            r_j, _, th_p, th_c = solve_batch(strategy, specs, r_max=max_r + 1)
+            th_c = th_c * specs.C
+
     r_task = r_j[jobs.job_id]
-    sim = STRATEGY_SIMS[strategy]
-    if strategy == "clone":
-        completion, machine = sim(key, jobs, r_task, p, max_r=max_r)
+    mc = lambda k: _mc_exec(k, jobs, strategy, r_task, p, max_r, oracle)
+    if reps == 1:
+        res = mc(key)
     else:
-        completion, machine = sim(key, jobs, r_task, p, max_r=max_r,
-                                  oracle=oracle)
-    res = aggregate(jobs, completion, machine)
+        res = mean_over_reps(jax.vmap(mc)(jax.random.split(key, reps)))
     return RunOutput(result=res, r_opt=r_j,
                      utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
                      theory_pocd=th_p, theory_cost=th_c)
 
 
+def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
+                 theta=1e-4, r_min=0.0, max_r: int = 8,
+                 oracle: bool = True, r_override=None,
+                 reps: int = 1) -> RunOutput:
+    """Single compiled trace->metrics program; `reps` vmaps the MC draws.
+
+    With reps=1 the draws are identical to the historical per-call path
+    (the key is used directly, not split). reps>1 averages the SimResult
+    over replications (job_met becomes a per-job met frequency).
+    """
+    return _run_core(
+        key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
+        None if r_override is None else jnp.int32(r_override),
+        n_jobs=jobs.n_jobs, strategy=strategy, p=p, max_r=max_r,
+        oracle=oracle, reps=reps)
+
+
 def run_all(key, jobs: JobSet, p: S.SimParams, theta=1e-4,
             strategies=("hadoop_ns", "hadoop_s", "mantri",
                         "clone", "srestart", "sresume"),
-            r_min_from_ns: bool = True, max_r: int = 8):
+            r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1):
     """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper)."""
     keys = jax.random.split(key, len(strategies))
     outs = {}
     r_min = 0.0
     for k, name in zip(keys, strategies):
         if name == "hadoop_ns":
-            outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=0.0)
+            outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=0.0,
+                                      reps=reps)
             if r_min_from_ns:
                 r_min = float(outs[name].result.pocd) - 1e-3
     for k, name in zip(keys, strategies):
         if name == "hadoop_ns":
             continue
         outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=r_min,
-                                  max_r=max_r)
+                                  max_r=max_r, reps=reps)
     return outs, r_min

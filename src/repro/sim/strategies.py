@@ -134,12 +134,12 @@ def sim_hadoop_ns(key, jobs: JobSet, p: SimParams):
     return T1, T1
 
 
-def _rank_among_job(values, job_id, n_jobs):
-    """Dense descending rank of each task's value within its job (0 = worst).
+def _rank_among_job_scan(values, job_id, n_jobs):
+    """Reference rank via a serial lax.scan (O(T) sequential steps).
 
-    O(T log T): sort by value descending, then the rank of a task is the
-    count of earlier-sorted tasks in the same job — computed via a cumulative
-    count per job over the sorted order.
+    Kept as the oracle for `_rank_among_job`: sort by value descending, then
+    the rank of a task is the count of earlier-sorted tasks in the same job,
+    accumulated one task at a time.
     """
     T = values.shape[0]
     order = jnp.argsort(-values)
@@ -154,6 +154,22 @@ def _rank_among_job(values, job_id, n_jobs):
     seen, ranks_sorted = jax.lax.scan(body, seen, sorted_jobs)
     ranks = jnp.zeros((T,), jnp.int32).at[order].set(ranks_sorted)
     return ranks
+
+
+def _rank_among_job(values, job_id, n_jobs):
+    """Dense descending rank of each task's value within its job (0 = worst).
+
+    Fully parallel O(T log T): one lexicographic sort by (job_id, -value)
+    groups each job's tasks contiguously in descending-value order, so a
+    task's rank is its sorted position minus its job's segment offset. Ties
+    break by original index (stable sort), matching `_rank_among_job_scan`.
+    """
+    T = values.shape[0]
+    order = jnp.lexsort((-values, job_id))
+    counts = jax.ops.segment_sum(jnp.ones((T,), jnp.int32), job_id, n_jobs)
+    starts = jnp.cumsum(counts) - counts          # exclusive prefix sum
+    ranks_sorted = jnp.arange(T, dtype=jnp.int32) - starts[job_id[order]]
+    return jnp.zeros((T,), jnp.int32).at[order].set(ranks_sorted)
 
 
 def sim_hadoop_s(key, jobs: JobSet, p: SimParams):

@@ -32,6 +32,21 @@ class JobSet(NamedTuple):
         return int(self.job_id.shape[0])
 
 
+def jobset_arrays(jobs: "JobSet") -> dict:
+    """The array leaves of a JobSet, for passing through `jax.jit`.
+
+    `n_jobs` is a Python int (it sizes segment reductions, which need a
+    static segment count), so a JobSet cannot cross a jit boundary whole;
+    jitted cores take (arrays, static n_jobs) and rebuild via `jobset_of`.
+    """
+    return {f: getattr(jobs, f) for f in JobSet._fields if f != "n_jobs"}
+
+
+def jobset_of(n_jobs: int, arrays: dict) -> "JobSet":
+    """Rebuild a JobSet inside a jitted core from `jobset_arrays` output."""
+    return JobSet(n_jobs=n_jobs, **arrays)
+
+
 def generate(n_jobs=2700, mean_tasks=370, seed=0, deadline_ratio=2.0,
              beta_range=(1.1, 2.0), t_min_range=(8.0, 15.0),
              hours=30.0, spot_price=1.0, max_tasks=5000):

@@ -1,18 +1,25 @@
 """Finite-capacity cluster engine: infinite-slot equivalence with the flat
-simulator, capacity monotonicity, slot-pool invariants, governor/admission."""
+simulator, jit-replay equivalence with the host-orchestrated oracle,
+capacity monotonicity, slot-pool invariants, governor/admission."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.sim import uniform_jobset, SimParams, run_strategy
+from repro.sim import uniform_jobset, SimParams, run_all, run_strategy
 from repro.cluster import (run_cluster, run_cluster_strategy, make_pool,
                            dispatch_scan, GovernorConfig, AdmissionConfig)
 from repro.cluster.admission import admit_jobs
+from repro.cluster.engine import build_strategy_table, replay
 
 P = SimParams()
 KEY = jax.random.PRNGKey(0)
 ALL = ("hadoop_ns", "hadoop_s", "mantri", "clone", "srestart", "sresume")
+
+
+def _build_table(jobs, strategy, max_r=8, theta=1e-3):
+    return build_strategy_table(KEY, jobs, strategy, P, theta=theta,
+                                max_r=max_r)
 
 
 @pytest.fixture(scope="module")
@@ -78,6 +85,78 @@ def test_tight_slots_monotone(small_jobs, strategy):
         assert lo <= hi + 1e-6, (strategy, pocds)
     for hi_w, lo_w in zip(waits, waits[1:]):
         assert hi_w >= lo_w - 1e-6, (strategy, waits)
+
+
+# ---------------------------------------------------------------------------
+# compiled replay == host-orchestrated replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["sresume", "hadoop_s"])
+@pytest.mark.parametrize("discipline", ["fifo", "edf"])
+@pytest.mark.parametrize("passes", [2, 3])
+def test_jit_replay_matches_host(small_jobs, strategy, discipline, passes):
+    """The single-program replay (sort-key dispatch + fori_loop relaxation)
+    must reproduce the legacy host path (flatnonzero compaction + one
+    device launch per pass) bit-for-bit: same starts, same releases, same
+    realized metrics — under both disciplines, small and ample pools."""
+    table, race = _build_table(small_jobs, strategy)
+    for slots in (40, 20_000):
+        rh, rel_h, st_h = replay(table, race, small_jobs, slots,
+                                 discipline=discipline, passes=passes,
+                                 backend="host")
+        rj, rel_j, st_j = replay(table, race, small_jobs, slots,
+                                 discipline=discipline, passes=passes,
+                                 backend="jit")
+        np.testing.assert_array_equal(np.asarray(st_h), np.asarray(st_j))
+        np.testing.assert_array_equal(np.asarray(rel_h), np.asarray(rel_j))
+        np.testing.assert_array_equal(np.asarray(rh.task_completion),
+                                      np.asarray(rj.task_completion))
+        np.testing.assert_array_equal(np.asarray(rh.task_machine),
+                                      np.asarray(rj.task_machine))
+        assert float(rh.busy_time) == pytest.approx(
+            float(rj.busy_time), rel=1e-6)
+
+
+def test_slots_none_matches_run_all(small_jobs):
+    """run_cluster(slots=None) reproduces run_all draw-for-draw: identical
+    key splits, identical Pareto draws, same PoCD/cost per strategy."""
+    outs_c, _ = run_cluster(KEY, small_jobs, P, slots=None, theta=1e-3)
+    outs_f, _ = run_all(KEY, small_jobs, P, theta=1e-3)
+    for s in ALL:
+        assert float(outs_c[s].result.pocd) == pytest.approx(
+            float(outs_f[s].result.pocd), abs=1e-6), s
+        assert float(outs_c[s].result.mean_cost) == pytest.approx(
+            float(outs_f[s].result.mean_cost), rel=1e-4), s
+
+
+def test_width_narrowing_matches_full(small_jobs):
+    """width="auto" (table sliced to max(r*) + 2 attempt columns) is exact:
+    dropped columns are active=False for every task."""
+    a = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=100,
+                             theta=1e-3)                  # auto narrowing
+    b = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=100,
+                             theta=1e-3, width=None)      # full max_r width
+    assert float(a.result.pocd) == float(b.result.pocd)
+    assert float(a.result.mean_cost) == float(b.result.mean_cost)
+    assert float(a.queue.mean_wait) == pytest.approx(
+        float(b.queue.mean_wait), rel=1e-5)
+
+
+def test_cluster_reps_axis(small_jobs):
+    """reps>1 vmaps build+replay over split keys inside one program and
+    returns MC means (job_met becomes a met frequency)."""
+    o1 = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=100,
+                              theta=1e-3, reps=1)
+    o4 = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=100,
+                              theta=1e-3, reps=4)
+    np.testing.assert_array_equal(np.asarray(o4.r_opt), np.asarray(o1.r_opt))
+    assert 0.0 <= float(o4.result.pocd) <= 1.0
+    assert float(o4.result.pocd) == pytest.approx(
+        float(o1.result.pocd), abs=0.1)
+    assert 0.0 <= float(o4.queue.utilization) <= 1.0 + 1e-6
+    jm = np.asarray(o4.result.job_met)
+    assert ((jm >= 0.0) & (jm <= 1.0)).all()
 
 
 def test_single_pass_rejected(small_jobs):

@@ -35,12 +35,43 @@ def test_pocd_mc_matches_ref(mode, shape):
 
 
 def test_pocd_mc_padding_path():
+    """Partial final tile: lanes past J are masked in-kernel (the old path
+    padded the uniforms to a full ghost tile)."""
     u, t_min, beta, D, r = _mc_inputs(J=200, N=8, R=4)  # not a tile multiple
     met_k, cost_k = ops.pocd_mc(u, t_min, beta, D, r, mode="clone")
     met_r, cost_r = ref.pocd_mc_ref(u, t_min, beta, D, r, mode="clone")
     np.testing.assert_allclose(np.asarray(cost_k), np.asarray(cost_r),
                                rtol=2e-5)
     assert met_k.shape == (200,)
+
+
+@pytest.mark.parametrize("shape", [(256, 16, 6), (200, 8, 4), (129, 8, 4)])
+def test_pocd_mc_all_matches_ref(shape):
+    """Fused 3-mode kernel: one Pareto transform, per-mode r* rows, exact
+    against the stacked single-mode oracle — full and partial tiles."""
+    J, N, R = shape
+    u, t_min, beta, D, r = _mc_inputs(J, N, R, seed=J)
+    r_modes = jnp.stack([r, jnp.maximum(r - 1, 0), jnp.minimum(r + 1, R - 2)])
+    met_k, cost_k = ops.pocd_mc_all(u, t_min, beta, D, r_modes)
+    met_r, cost_r = ref.pocd_mc_all_ref(u, t_min, beta, D, r_modes)
+    assert met_k.shape == (3, J)
+    np.testing.assert_allclose(np.asarray(met_k), np.asarray(met_r),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cost_k), np.asarray(cost_r),
+                               rtol=2e-5)
+
+
+def test_pocd_mc_all_consistent_with_single_mode():
+    """Row m of the fused sweep equals a single-mode launch with that r."""
+    u, t_min, beta, D, r = _mc_inputs(J=256, N=8, R=4)
+    r_modes = jnp.stack([r, r, r])
+    met_all, cost_all = ops.pocd_mc_all(u, t_min, beta, D, r_modes)
+    for m, mode in enumerate(ops.MODES):
+        met_1, cost_1 = ops.pocd_mc(u, t_min, beta, D, r, mode=mode)
+        np.testing.assert_allclose(np.asarray(met_all[m]), np.asarray(met_1),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(cost_all[m]),
+                                   np.asarray(cost_1), rtol=1e-6)
 
 
 def test_pocd_mc_matches_closed_form():
