@@ -9,7 +9,6 @@ tau_est=40, tau_kill=80, theta=1e-4, beta~2; trace simulation = 2700 jobs /
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,6 @@ import numpy as np
 
 from repro.sim import (generate, uniform_jobset, SimParams, run_all,
                        run_strategy)
-from repro.sim.metrics import net_utility
 
 KEY = jax.random.PRNGKey(0)
 

@@ -99,18 +99,18 @@ def _mc_kernel_inputs(J=1024, N=32, R=6):
     return u, t_min, beta, D, r
 
 
-def bench_pocd_kernel(J=1024, N=32, R=6):
+def bench_pocd_kernel(J=1024, N=32, R=6, iters=3):
     u, t_min, beta, D, r = _mc_kernel_inputs(J, N, R)
 
     def run():
         met, cost = ops.pocd_mc(u, t_min, beta, D, r, mode="sresume")
         jax.block_until_ready(met)
 
-    dt = _time(run)
+    dt = _time(run, iters=iters)
     return dt, J * N * R / dt          # attempt-samples per second
 
 
-def bench_pocd_kernel_all(J=1024, N=32, R=6):
+def bench_pocd_kernel_all(J=1024, N=32, R=6, iters=3):
     """Fused 3-mode sweep in one grid pass (vs 3 separate launches)."""
     u, t_min, beta, D, r = _mc_kernel_inputs(J, N, R)
     r_modes = jnp.stack([r, r, r])
@@ -119,8 +119,21 @@ def bench_pocd_kernel_all(J=1024, N=32, R=6):
         met, cost = ops.pocd_mc_all(u, t_min, beta, D, r_modes)
         jax.block_until_ready(met)
 
-    dt = _time(run)
+    dt = _time(run, iters=iters)
     return dt, 3 * J * N * R / dt      # attempt-samples per second
+
+
+def bench_workload_synthesize(n_jobs=2700, scenario="diurnal-burst"):
+    """Scenario resolution -> trace synthesis -> JobSet lowering (the
+    offline workload path every heterogeneous evaluation pays once)."""
+    from repro.workloads import make_jobset
+
+    def run():
+        jobs = make_jobset(scenario, n_jobs=n_jobs)
+        jax.block_until_ready(jobs.task_t_min)
+
+    dt = _time(run, warmup=2, iters=6)
+    return dt, n_jobs / dt          # jobs synthesized per second
 
 
 def bench_flash_attention(B=1, H=4, S=1024, D=128):

@@ -10,8 +10,14 @@ By default capacity is infinite (the paper's analytic regime). With
 engine (repro.cluster): attempts queue on N machine slots under FIFO or
 EDF dispatch, and the table gains utilization / queue-wait columns.
 
+With `--scenario NAME` the trace comes from the workload registry
+(`repro.workloads`): heterogeneous job classes, arrival processes, and
+per-class SLA weights, with a per-class result breakdown.
+
 Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
       PYTHONPATH=src python examples/simulate_cluster.py --jobs 200 --slots 2000
+      PYTHONPATH=src python examples/simulate_cluster.py \
+          --scenario diurnal-burst --jobs 50 --slots 500
 """
 import argparse
 
@@ -19,9 +25,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.sim import generate, SimParams, run_all
+from repro.sim.metrics import class_summary
+from repro.workloads import list_scenarios, make_trace, summarize, to_jobset
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--jobs", type=int, default=2700)
+ap.add_argument("--scenario", default=None,
+                choices=sorted(list_scenarios()),
+                help="workload-registry scenario (default: the legacy "
+                     "single-mix Google-trace generator)")
+ap.add_argument("--seed", type=int, default=0)
 ap.add_argument("--theta", type=float, default=1e-4)
 ap.add_argument("--slots", type=int, default=0,
                 help="machine slots (0 = infinite capacity, the default)")
@@ -35,7 +48,16 @@ ap.add_argument("--admission-slack", type=float, default=0.0,
                 help="> 0 enables deadline-aware admission control")
 args = ap.parse_args()
 
-jobs = generate(n_jobs=args.jobs, seed=0)
+if args.scenario:
+    trace = make_trace(args.scenario, n_jobs=args.jobs, seed=args.seed)
+    jobs = to_jobset(trace)
+    stats = summarize(trace)
+    mix = ", ".join(f"{k} {v:.0%}" for k, v in stats["class_mix"].items())
+    print(f"scenario {args.scenario}: {jobs.n_jobs} jobs, "
+          f"{jobs.total_tasks} tasks over {stats['hours']:.1f} h ({mix})")
+else:
+    trace = None
+    jobs = generate(n_jobs=args.jobs, seed=args.seed)
 print(f"trace: {jobs.n_jobs} jobs, {jobs.total_tasks} tasks, "
       f"beta in [{float(jobs.beta.min()):.2f}, {float(jobs.beta.max()):.2f}]")
 
@@ -72,6 +94,14 @@ else:
         print(f"{name:12s} {float(o.result.pocd):8.3f} "
               f"{float(o.result.mean_cost):10.0f} {float(o.utility):9.3f} "
               f"{float(jnp.mean(o.r_opt)):8.2f}")
+
+if trace is not None:
+    per_cls = class_summary(jobs, outs["sresume"].result)
+    print(f"\nS-Resume by class ({args.scenario}):")
+    for cid, row in per_cls.items():
+        name = trace.class_names[cid]
+        print(f"  {name:12s} jobs {row['n_jobs']:4d}  "
+              f"PoCD {row['pocd']:.3f}  mean cost {row['mean_cost']:.0f}")
 
 ns, best = outs["hadoop_ns"], outs["sresume"]
 print(f"\nChronos (S-Resume) vs Hadoop-NS: PoCD +"

@@ -512,7 +512,7 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
     return out._replace(queue=out.queue._replace(slots=slots))
 
 
-def run_cluster(key, jobs: JobSet, p: SimParams, slots: Optional[int] = None,
+def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
                 theta=1e-4, strategies=ALL_STRATEGIES,
                 r_min_from_ns: bool = True, max_r: int = 8,
                 oracle: bool = True, discipline: str = "fifo",
@@ -522,10 +522,15 @@ def run_cluster(key, jobs: JobSet, p: SimParams, slots: Optional[int] = None,
                 reps: int = 1):
     """Finite-capacity mirror of `sim.runner.run_all`.
 
-    Returns (outs, r_min) where outs maps strategy -> ClusterOutput. With
+    `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
+    (resolved with that scenario's default size and seed). Returns
+    (outs, r_min) where outs maps strategy -> ClusterOutput. With
     slots=None this reproduces run_all's results draw-for-draw (same key
     splits); with finite slots the same draws queue on the bounded pool.
     """
+    if isinstance(jobs, str):
+        from ..workloads.registry import make_jobset
+        jobs = make_jobset(jobs)
     keys = jax.random.split(key, len(strategies))
     admitted = None
     if admission is not None and slots is not None:

@@ -8,7 +8,7 @@ smoke tests (same family, same block pattern, same divisibility paths).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

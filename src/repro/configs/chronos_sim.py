@@ -3,7 +3,7 @@
 These drive benchmarks/paper_figures.py and examples/simulate_cluster.py —
 the "paper's own arch" alongside the 10 assigned model architectures.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

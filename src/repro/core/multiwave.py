@@ -46,7 +46,6 @@ def multiwave_pocd(r, t_min, beta, D, N, n_slots, tau_kill=None,
         return 1.0
     # grid over [0, D]: everything beyond D only matters as "fail"
     dt = D / grid
-    ts = np.arange(grid) * dt + dt / 2
     dens = []
     for m in waves:
         cdf = wave_cdf(np.arange(grid + 1) * dt, t_min, beta, r, m)

@@ -8,7 +8,7 @@ exploits concavity above Gamma and brute-forces the (few) integers below it.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax.numpy as jnp
 

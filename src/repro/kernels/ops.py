@@ -9,9 +9,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from .pocd_mc import pocd_mc_pallas, pocd_mc_all_pallas, JOB_TILE, MODES
+from .pocd_mc import MODES as MODES  # re-export: tests use ops.MODES
+from .pocd_mc import pocd_mc_pallas, pocd_mc_all_pallas
 from .flash_attention import flash_attention
 
 

@@ -31,7 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
 from ..models import model as model_lib
-from ..models.param import values_of, is_meta
+from ..models.param import values_of
 from ..models.inputs import batch_struct
 from ..sharding.planner import make_plan, plan_context
 from ..train.optimizer import make_optimizer

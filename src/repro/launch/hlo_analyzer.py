@@ -192,7 +192,6 @@ class HloAnalysis:
         return total
 
     def _dot_flops(self, op: OpInfo) -> float:
-        out_b = _shape_elems_bytes(op.shape_txt)
         _, out_dims = _shape_dims(op.shape_txt)
         out_elems = 1
         for d in out_dims:

@@ -13,14 +13,13 @@ holding the current per-sequence position.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from .param import P as Pm, values_of, normal
+from .param import P as Pm, normal
 from . import layers as L
 from . import transformer as TF
 from . import mamba2 as M2
@@ -259,7 +258,6 @@ def _build_hybrid(cfg) -> Model:
             body = jax.checkpoint(group_body)
         x, collected = jax.lax.scan(body, x, params["groups"])
 
-        tail_states = []
         if tail:
             def tail_body(carry, layer_p):
                 h, st = M2.apply_mamba_full(layer_p, carry, cfg)

@@ -7,8 +7,7 @@ parameters. KV caches mirror the pattern structure with a leading steps dim.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
-from ..core import (JobSpec, fit_mle, solve, solve_grid, Solution, STRATEGIES)
+from ..core import (JobSpec, fit_mle, solve_grid, Solution, STRATEGIES)
 from .telemetry import Telemetry
 
 

@@ -21,11 +21,10 @@ from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor, Future
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from ..core.estimator import ProgressReport, estimate_completion_chronos
 from ..core.estimator import handoff_offset
 
 
@@ -89,7 +88,6 @@ class SpeculativeTaskRunner:
             deadline: float, tau_est: float, tau_kill: float) -> list:
         t0 = time.monotonic()
         results: list[Optional[TaskResult]] = [None] * n_tasks
-        machine = [0.0] * n_tasks
 
         clock = lambda: time.monotonic() - t0
 

@@ -16,15 +16,11 @@ is measurable on CPU and the policy code is the production path.
 """
 from __future__ import annotations
 
-import heapq
-import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 
 from ..core import JobSpec, solve, Solution
-from ..core.pareto import sample as pareto_sample
 
 
 @dataclass(order=True)

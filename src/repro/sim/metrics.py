@@ -27,6 +27,30 @@ def aggregate(jobs: JobSet, completion, machine) -> SimResult:
                      job_cost=cost, mean_cost=jnp.mean(cost))
 
 
+def class_summary(jobs: JobSet, result: SimResult) -> dict:
+    """Per-workload-class breakdown of a SimResult (host-side numpy).
+
+    Returns {class_id: {"n_jobs", "pocd", "mean_cost", "mean_completion"}}.
+    With reps>1 `job_met` is already a met frequency, so `pocd` stays the
+    per-class deadline-met probability.
+    """
+    import numpy as np
+    cls = np.asarray(jobs.job_class)
+    met = np.asarray(result.job_met, np.float64)
+    cost = np.asarray(result.job_cost, np.float64)
+    comp = np.asarray(result.job_completion, np.float64)
+    out = {}
+    for c in np.unique(cls):
+        m = cls == c
+        out[int(c)] = {
+            "n_jobs": int(m.sum()),
+            "pocd": float(met[m].mean()),
+            "mean_cost": float(cost[m].mean()),
+            "mean_completion": float(comp[m].mean()),
+        }
+    return out
+
+
 def net_utility(pocd, mean_cost, r_min, theta):
     """Paper's evaluation utility on empirical quantities (Fig 2c/3c)."""
     gap = jnp.maximum(pocd - r_min, 1e-9)

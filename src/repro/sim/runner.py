@@ -52,12 +52,16 @@ def jobspecs_of(jobs: JobSet, p: S.SimParams, theta, r_min=0.0) -> JobSpec:
     tau_kill = tau_est + p.tau_kill_gap_frac * t_min
     f = lambda x: jnp.asarray(x, jnp.float32)
     J = jobs.n_jobs
+    # per-job SLA weight: scalar theta scaled by the workload class's
+    # theta_scale (ones for homogeneous traces — exact float32 identity),
+    # so Algorithm 1 solves a class-heterogeneous r* in the same batch
+    theta_j = jnp.full((J,), theta, jnp.float32) * f(jobs.theta_scale)
     return JobSpec(
         t_min=f(t_min), beta=f(jobs.beta), D=f(jobs.D),
         N=jobs.n_tasks.astype(jnp.float32),
         tau_est=f(tau_est), tau_kill=f(tau_kill),
         phi_est=jnp.full((J,), p.phi_est, jnp.float32),
-        C=f(jobs.C), theta=jnp.full((J,), theta, jnp.float32),
+        C=f(jobs.C), theta=theta_j,
         R_min=jnp.full((J,), r_min, jnp.float32))
 
 
@@ -134,11 +138,18 @@ def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
         oracle=oracle, reps=reps)
 
 
-def run_all(key, jobs: JobSet, p: S.SimParams, theta=1e-4,
+def run_all(key, jobs, p: S.SimParams, theta=1e-4,
             strategies=("hadoop_ns", "hadoop_s", "mantri",
                         "clone", "srestart", "sresume"),
             r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1):
-    """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper)."""
+    """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper).
+
+    `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
+    (resolved with that scenario's default size and seed).
+    """
+    if isinstance(jobs, str):
+        from ..workloads.registry import make_jobset
+        jobs = make_jobset(jobs)
     keys = jax.random.split(key, len(strategies))
     outs = {}
     r_min = 0.0

@@ -14,7 +14,14 @@ import jax.numpy as jnp
 
 
 class JobSet(NamedTuple):
-    """Per-job arrays (n_jobs,) + flat per-task arrays (total_tasks,)."""
+    """Per-job arrays (n_jobs,) + flat per-task arrays (total_tasks,).
+
+    `job_class` / `theta_scale` carry workload heterogeneity (see
+    `repro.workloads`): the class id each job was sampled from and a
+    per-job multiplier on the SLA weight theta, so r* is optimized per
+    job class rather than globally. Homogeneous constructors fill
+    zeros / ones, which is bit-identical to the pre-class behavior.
+    """
     n_jobs: int
     n_tasks: jnp.ndarray          # (J,) int32
     t_min: jnp.ndarray            # (J,)
@@ -22,6 +29,8 @@ class JobSet(NamedTuple):
     D: jnp.ndarray                # (J,)
     arrival: jnp.ndarray          # (J,) seconds from trace start
     C: jnp.ndarray                # (J,) VM price per machine-second
+    job_class: jnp.ndarray        # (J,) int32 — workload class id
+    theta_scale: jnp.ndarray      # (J,) per-job theta multiplier
     job_id: jnp.ndarray           # (T,) int32 — flat task -> job
     task_t_min: jnp.ndarray       # (T,)
     task_beta: jnp.ndarray        # (T,)
@@ -47,6 +56,41 @@ def jobset_of(n_jobs: int, arrays: dict) -> "JobSet":
     return JobSet(n_jobs=n_jobs, **arrays)
 
 
+def build_jobset(n_tasks, t_min, beta, D, arrival, C,
+                 job_class=None, theta_scale=None) -> "JobSet":
+    """Assemble a JobSet from per-job numpy columns (the trace schema).
+
+    Computes the flat per-task gather arrays once; every trace source
+    (the legacy `generate`, `repro.workloads.traces.to_jobset`, tests)
+    goes through here so the flat layout contract lives in one place.
+    """
+    n_tasks = np.asarray(n_tasks, np.int32)
+    n_jobs = int(n_tasks.shape[0])
+    t_min = np.asarray(t_min, np.float32)
+    beta = np.asarray(beta, np.float32)
+    D = np.asarray(D, np.float32)
+    if job_class is None:
+        job_class = np.zeros(n_jobs, np.int32)
+    if theta_scale is None:
+        theta_scale = np.ones(n_jobs, np.float32)
+    job_id = np.repeat(np.arange(n_jobs, dtype=np.int32), n_tasks)
+    return JobSet(
+        n_jobs=n_jobs,
+        n_tasks=jnp.asarray(n_tasks),
+        t_min=jnp.asarray(t_min),
+        beta=jnp.asarray(beta),
+        D=jnp.asarray(D),
+        arrival=jnp.asarray(np.asarray(arrival, np.float32)),
+        C=jnp.asarray(np.asarray(C, np.float32)),
+        job_class=jnp.asarray(np.asarray(job_class, np.int32)),
+        theta_scale=jnp.asarray(np.asarray(theta_scale, np.float32)),
+        job_id=jnp.asarray(job_id),
+        task_t_min=jnp.asarray(t_min[job_id]),
+        task_beta=jnp.asarray(beta[job_id]),
+        task_D=jnp.asarray(D[job_id]),
+    )
+
+
 def generate(n_jobs=2700, mean_tasks=370, seed=0, deadline_ratio=2.0,
              beta_range=(1.1, 2.0), t_min_range=(8.0, 15.0),
              hours=30.0, spot_price=1.0, max_tasks=5000):
@@ -64,35 +108,12 @@ def generate(n_jobs=2700, mean_tasks=370, seed=0, deadline_ratio=2.0,
     D = (deadline_ratio * mean_task_time).astype(np.float32)
     arrival = np.sort(rng.uniform(0, hours * 3600, size=n_jobs)).astype(np.float32)
     C = np.full(n_jobs, spot_price, np.float32)
-
-    job_id = np.repeat(np.arange(n_jobs, dtype=np.int32), n_tasks)
-    return JobSet(
-        n_jobs=n_jobs,
-        n_tasks=jnp.asarray(n_tasks),
-        t_min=jnp.asarray(t_min),
-        beta=jnp.asarray(beta),
-        D=jnp.asarray(D),
-        arrival=jnp.asarray(arrival),
-        C=jnp.asarray(C),
-        job_id=jnp.asarray(job_id),
-        task_t_min=jnp.asarray(t_min[job_id]),
-        task_beta=jnp.asarray(beta[job_id]),
-        task_D=jnp.asarray(D[job_id]),
-    )
+    return build_jobset(n_tasks, t_min, beta, D, arrival, C)
 
 
 def uniform_jobset(n_jobs, n_tasks, t_min, beta, D, C=1.0):
     """All jobs identical — used for validating sim against closed forms."""
-    job_id = np.repeat(np.arange(n_jobs, dtype=np.int32), n_tasks)
     ones = np.ones(n_jobs, np.float32)
-    return JobSet(
-        n_jobs=n_jobs,
-        n_tasks=jnp.asarray(np.full(n_jobs, n_tasks, np.int32)),
-        t_min=jnp.asarray(t_min * ones), beta=jnp.asarray(beta * ones),
-        D=jnp.asarray(D * ones), arrival=jnp.asarray(0 * ones),
-        C=jnp.asarray(C * ones),
-        job_id=jnp.asarray(job_id),
-        task_t_min=jnp.asarray(np.full(job_id.shape, t_min, np.float32)),
-        task_beta=jnp.asarray(np.full(job_id.shape, beta, np.float32)),
-        task_D=jnp.asarray(np.full(job_id.shape, D, np.float32)),
-    )
+    return build_jobset(
+        np.full(n_jobs, n_tasks, np.int32),
+        t_min * ones, beta * ones, D * ones, 0 * ones, C * ones)

@@ -10,7 +10,6 @@ tau_kill semantics map onto SPMD collectives (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -39,8 +38,6 @@ def make_train_step(model, optimizer, n_micro: int, lr_schedule=None,
                        footprint; acceptable over <=32 microbatches with the
                        f32 optimizer math downstream — documented tradeoff).
     """
-    cfg = model.cfg
-
     def loss(params, mb):
         return model.loss_fn(params, mb)
 

@@ -12,12 +12,11 @@ Per step:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..ckpt import checkpoint as ckpt
 from ..data.pipeline import DataPipeline, PipelineConfig

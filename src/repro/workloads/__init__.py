@@ -1,0 +1,86 @@
+"""Trace-driven heterogeneous workloads for the Chronos evaluation stack.
+
+The paper validates Chronos with trace-driven simulation over a
+heterogeneous Hadoop/Google workload; this package supplies that axis:
+
+* `generators` — key-split JAX samplers for job-class mixtures
+  (task-count tails, per-class Pareto parameters, SLA economics) and
+  arrival processes (Poisson, batch-Poisson flash crowds, diurnal NHPP,
+  cyclic MMPP).
+* `traces` — the compact columnar `WorkloadTrace` schema with .npz
+  save/load, the `synthesize` sampler, and the paper-trace calibration
+  statistics.
+* `registry` — named scenario presets (`paper-hadoop`, `heavy-tail`,
+  `diurnal-burst`, `multi-tenant-sla`, `flash-crowd`) resolvable to
+  JobSets from examples, benchmarks, and `run_all` / `run_cluster`.
+
+    from repro.workloads import make_jobset
+    jobs = make_jobset("multi-tenant-sla", n_jobs=300)
+
+Heterogeneity flows through `JobSet.job_class` / `JobSet.theta_scale`
+into the shared `jobspecs_of` split, so Algorithm 1 solves a per-class
+r* in one batch and both engines (flat sim and capacity replay) execute
+the same heterogeneous draws.
+"""
+
+from .generators import (
+    ARRIVAL_PROCESSES,
+    JobClass,
+    batch_poisson_arrivals,
+    diurnal_arrivals,
+    hill_estimator,
+    mmpp_arrivals,
+    poisson_arrivals,
+    sample_arrivals,
+    sample_classes,
+    sample_pareto_params,
+    sample_task_counts,
+)
+from .registry import (
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    make_jobset,
+    make_trace,
+    register,
+)
+from .traces import (
+    PAPER_TRACE_STATS,
+    TRACE_COLUMNS,
+    WorkloadTrace,
+    load_trace,
+    save_trace,
+    summarize,
+    synthesize,
+    to_jobset,
+)
+
+__all__ = [
+    "ARRIVAL_PROCESSES",
+    "JobClass",
+    "PAPER_TRACE_STATS",
+    "SCENARIOS",
+    "Scenario",
+    "TRACE_COLUMNS",
+    "WorkloadTrace",
+    "batch_poisson_arrivals",
+    "diurnal_arrivals",
+    "get_scenario",
+    "hill_estimator",
+    "list_scenarios",
+    "load_trace",
+    "make_jobset",
+    "make_trace",
+    "mmpp_arrivals",
+    "poisson_arrivals",
+    "register",
+    "sample_arrivals",
+    "sample_classes",
+    "sample_pareto_params",
+    "sample_task_counts",
+    "save_trace",
+    "summarize",
+    "synthesize",
+    "to_jobset",
+]

@@ -1,0 +1,210 @@
+"""Vectorized, key-split JAX samplers for heterogeneous workloads.
+
+Three ingredients compose into a trace (see `traces.synthesize`):
+
+* **Job classes** — a `JobClass` mixture; each class fixes the task-count
+  law (lognormal body, heavy right tail), the per-task Pareto parameters
+  `(t_min, beta)`, the deadline ratio, and the SLA economics
+  (`theta_scale`, `price`). Per-job parameters are sampled by gathering
+  the stacked class columns at a categorical class assignment, so the
+  whole mixture is one fused draw — no per-class python loop.
+* **Arrival processes** — homogeneous Poisson, batch Poisson (flash
+  crowds: geometric batch sizes at Poisson batch epochs), diurnal NHPP
+  (sinusoidal intensity, sampled exactly by time-rescaling a unit-rate
+  Poisson process through the inverse integrated intensity), and a
+  cyclic MMPP (piecewise-constant intensity with exponential dwells,
+  same time-rescaling inversion).
+* **Tail diagnostics** — `hill_estimator` recovers a Pareto tail index
+  from samples; tests use it to verify generated workloads carry the
+  tail the class mixture promises.
+
+Everything below is jit-compatible (static shapes, key-split
+`jax.random`); trace synthesis materializes the results to numpy once,
+offline.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class JobClass(NamedTuple):
+    """One component of a workload mixture."""
+
+    name: str
+    weight: float                      # mixture weight (normalized)
+    mean_tasks: float                  # E[tasks/job] for this class
+    sigma_tasks: float                 # lognormal sigma (task-count tail)
+    t_min_range: Tuple[float, float]   # per-job Pareto scale, uniform
+    beta_range: Tuple[float, float]    # per-job Pareto tail, uniform
+    deadline_ratio: float              # D = ratio * E[task time]
+    theta_scale: float = 1.0           # SLA-weight multiplier (tenant tier)
+    price: float = 1.0                 # VM price C for this class
+    min_tasks: int = 4
+    max_tasks: int = 5000
+
+
+def _column(classes: Sequence[JobClass], field: str) -> jnp.ndarray:
+    """Stack one JobClass field into a (K,) float32 column."""
+    return jnp.asarray([getattr(c, field) for c in classes], jnp.float32)
+
+
+def _range_columns(classes: Sequence[JobClass], field: str):
+    lo = jnp.asarray([getattr(c, field)[0] for c in classes], jnp.float32)
+    hi = jnp.asarray([getattr(c, field)[1] for c in classes], jnp.float32)
+    return lo, hi
+
+
+def sample_classes(key, n_jobs: int,
+                   classes: Sequence[JobClass]) -> jnp.ndarray:
+    """(J,) int32 class assignment ~ Categorical(normalized weights)."""
+    logits = jnp.log(_column(classes, "weight"))
+    return jax.random.categorical(key, logits, shape=(n_jobs,)).astype(
+        jnp.int32)
+
+
+def sample_task_counts(key, cls: jnp.ndarray,
+                       classes: Sequence[JobClass]) -> jnp.ndarray:
+    """(J,) int32 heavy-tailed task counts, mean-calibrated per class.
+
+    Lognormal with mu = log(mean) - sigma^2 / 2 so E[n] = mean_tasks
+    before clipping; sigma_tasks controls how heavy the right tail is.
+    """
+    sigma = _column(classes, "sigma_tasks")[cls]
+    mu = jnp.log(_column(classes, "mean_tasks"))[cls] - 0.5 * sigma**2
+    lo = _column(classes, "min_tasks")[cls]
+    hi = _column(classes, "max_tasks")[cls]
+    raw = jnp.exp(mu + sigma * jax.random.normal(key, cls.shape))
+    return jnp.clip(raw, lo, hi).astype(jnp.int32)
+
+
+def sample_pareto_params(key, cls: jnp.ndarray, classes: Sequence[JobClass]):
+    """Per-job (t_min, beta, D): uniform within the class ranges, with
+    D = deadline_ratio * E[Pareto(t_min, beta)]."""
+    k1, k2 = jax.random.split(key)
+    t_lo, t_hi = _range_columns(classes, "t_min_range")
+    b_lo, b_hi = _range_columns(classes, "beta_range")
+    t_min = t_lo[cls] + (t_hi - t_lo)[cls] * jax.random.uniform(k1, cls.shape)
+    beta = b_lo[cls] + (b_hi - b_lo)[cls] * jax.random.uniform(k2, cls.shape)
+    mean_task = t_min * beta / (beta - 1.0)
+    D = _column(classes, "deadline_ratio")[cls] * mean_task
+    return t_min, beta, D
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes — all return sorted (J,) arrival times in seconds
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(key, n_jobs: int, rate: float) -> jnp.ndarray:
+    """Homogeneous Poisson: cumulative exponential gaps at `rate` (1/s)."""
+    gaps = jax.random.exponential(key, (n_jobs,)) / rate
+    return jnp.cumsum(gaps)
+
+
+def batch_poisson_arrivals(key, n_jobs: int, rate: float,
+                           mean_batch: float = 10.0) -> jnp.ndarray:
+    """Batch Poisson (flash crowd): batches arrive as a Poisson process,
+    batch sizes are geometric with mean `mean_batch`, and every job in a
+    batch lands at the batch epoch. The long-run job rate stays `rate`
+    (batch epochs arrive at rate / mean_batch).
+    """
+    k1, k2 = jax.random.split(key)
+    new_batch = jax.random.bernoulli(k1, 1.0 / mean_batch, (n_jobs,))
+    new_batch = new_batch.at[0].set(True)
+    gaps = jax.random.exponential(k2, (n_jobs,)) * (mean_batch / rate)
+    return jnp.cumsum(jnp.where(new_batch, gaps, 0.0))
+
+
+def _rescale_unit_poisson(key, n_jobs: int, t_grid, lam_grid) -> jnp.ndarray:
+    """Sample an NHPP exactly: unit-rate epochs U_k = cumsum Exp(1) are
+    mapped through the inverse of the integrated intensity Lambda(t),
+    evaluated by linear interpolation on (t_grid, lam_grid)."""
+    unit = jnp.cumsum(jax.random.exponential(key, (n_jobs,)))
+    unit = jnp.minimum(unit, lam_grid[-1])  # clamp into the covered horizon
+    return jnp.interp(unit, lam_grid, t_grid)
+
+
+def diurnal_arrivals(key, n_jobs: int, rate: float,
+                     amplitude: float = 0.8,
+                     period: float = 86400.0,
+                     grid_points: int = 4096) -> jnp.ndarray:
+    """Diurnal NHPP: rate(t) = rate * (1 + amplitude * sin(2 pi t / T)),
+    so `rate` is the long-run job rate like every other process here.
+
+    Integrated intensity in closed form; horizon sized so the grid covers
+    the expected n_jobs-th arrival with 2x margin.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    horizon = 2.0 * n_jobs / rate + period
+    t = jnp.linspace(0.0, horizon, grid_points)
+    w = 2.0 * jnp.pi / period
+    lam = rate * (t + amplitude / w * (1.0 - jnp.cos(w * t)))
+    return _rescale_unit_poisson(key, n_jobs, t, lam)
+
+
+def mmpp_arrivals(key, n_jobs: int, rate: float,
+                  phase_shape: Sequence[float] = (3.0, 0.2),
+                  mean_dwell: float = 3600.0) -> jnp.ndarray:
+    """Cyclic MMPP: the modulating chain cycles through phases with
+    i.i.d. Exp(mean_dwell) dwells; arrivals are Poisson at the current
+    phase rate. Sampled exactly by time-rescaling through the
+    piecewise-linear integrated intensity.
+
+    `rate` is the long-run job rate (the shared arrival-process
+    contract); `phase_shape` gives the *relative* phase intensities,
+    normalized so their mean equals `rate`. The default (3.0, 0.2) is
+    the classic bursty ON/OFF interrupted Poisson process.
+    """
+    shape = jnp.asarray(phase_shape, jnp.float32)
+    rates = rate * shape / jnp.mean(shape)
+    n_phases = rates.shape[0]
+    # enough dwell segments to cover the expected horizon with 4x margin
+    n_seg = int(4.0 * (n_jobs / rate) / mean_dwell) + 4 * n_phases
+    k1, k2 = jax.random.split(key)
+    dwell = jax.random.exponential(k1, (n_seg,)) * mean_dwell
+    seg_rate = rates[jnp.arange(n_seg) % n_phases]
+    t_grid = jnp.concatenate([jnp.zeros(1), jnp.cumsum(dwell)])
+    lam_grid = jnp.concatenate(
+        [jnp.zeros(1), jnp.cumsum(seg_rate * dwell)])
+    return _rescale_unit_poisson(k2, n_jobs, t_grid, lam_grid)
+
+
+ARRIVAL_PROCESSES = {
+    "poisson": poisson_arrivals,
+    "batch": batch_poisson_arrivals,
+    "diurnal": diurnal_arrivals,
+    "mmpp": mmpp_arrivals,
+}
+
+
+def sample_arrivals(key, n_jobs: int, process: str, rate: float,
+                    **kwargs) -> jnp.ndarray:
+    """Dispatch to a named arrival process at long-run job rate `rate`."""
+    if process not in ARRIVAL_PROCESSES:
+        raise ValueError(
+            f"unknown arrival process {process!r}; "
+            f"expected one of {tuple(ARRIVAL_PROCESSES)}")
+    return ARRIVAL_PROCESSES[process](key, n_jobs, rate, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Tail diagnostics
+# ---------------------------------------------------------------------------
+
+
+def hill_estimator(samples, k: int):
+    """Hill estimator of the Pareto tail index alpha from the k largest
+    order statistics: alpha_hat = k / sum(log(x_(i) / x_(k+1))). For
+    Pareto(t_min, beta) samples this converges to beta."""
+    x = jnp.sort(jnp.asarray(samples, jnp.float32))
+    if not 0 < k < x.shape[0]:
+        raise ValueError(
+            f"need 0 < k < n_samples, got k={k}, n={x.shape[0]}")
+    top = x[-k:]
+    x_k1 = x[-(k + 1)]
+    return k / jnp.sum(jnp.log(top / x_k1))

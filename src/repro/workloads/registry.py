@@ -1,0 +1,164 @@
+"""Named scenario presets — the evaluation harness's workload menu.
+
+Every scenario is a declarative `Scenario` (class mixture + arrival
+process + default size); `make_jobset("diurnal-burst")` resolves it to a
+ready-to-run JobSet. Examples, benchmarks, and `run_all` / `run_cluster`
+accept these names directly, so "run Chronos under a flash crowd" is one
+flag, reproducible offline from the seed.
+
+Built-ins:
+
+* ``paper-hadoop``     — the paper's Section VII.B regime: a three-class
+  Google/Hadoop trace mix calibrated to `traces.PAPER_TRACE_STATS`
+  (~370 tasks/job, beta in [1.1, 2.0], 2x deadlines, 30 h Poisson).
+* ``heavy-tail``       — tail-stress: beta pinned near 1 and a wide
+  lognormal task-count tail; speculation is most valuable here.
+* ``diurnal-burst``    — the paper mix arriving on a sinusoidal NHPP
+  (day/night swing), so finite-slot replays see rush-hour congestion.
+* ``multi-tenant-sla`` — three tenant tiers with different SLA weights
+  (theta_scale), deadline ratios, and prices: Algorithm 1 lands a
+  different r* per tier from a single batched solve.
+* ``flash-crowd``      — batch-Poisson arrivals (geometric crowds of
+  ~25 jobs at Poisson epochs) of small interactive jobs.
+
+`register` adds user scenarios at runtime (name-keyed, overwrite
+refused unless replace=True).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+from .generators import JobClass
+from .traces import WorkloadTrace, synthesize, to_jobset
+
+
+class Scenario(NamedTuple):
+    name: str
+    description: str
+    classes: Tuple[JobClass, ...]
+    arrival: str = "poisson"          # generators.ARRIVAL_PROCESSES key
+    arrival_kw: Optional[dict] = None  # None = process defaults
+    n_jobs: int = 600                 # default size; callers may override
+    hours: float = 30.0               # sets the long-run job rate
+    seed: int = 0
+
+
+# Three-class mix calibrated to PAPER_TRACE_STATS: weighted mean tasks
+# 0.55*40 + 0.35*400 + 0.10*2000 = 362 ~ 370, beta spanning [1.1, 2.0].
+_PAPER_CLASSES = (
+    JobClass(name="interactive", weight=0.55, mean_tasks=40.0,
+             sigma_tasks=0.8, t_min_range=(8.0, 12.0),
+             beta_range=(1.4, 2.0), deadline_ratio=2.0),
+    JobClass(name="batch", weight=0.35, mean_tasks=400.0,
+             sigma_tasks=1.0, t_min_range=(8.0, 15.0),
+             beta_range=(1.2, 1.8), deadline_ratio=2.0),
+    JobClass(name="analytics", weight=0.10, mean_tasks=2000.0,
+             sigma_tasks=1.2, t_min_range=(10.0, 15.0),
+             beta_range=(1.1, 1.5), deadline_ratio=2.5),
+)
+
+SCENARIOS = {}
+
+
+def register(scenario: Scenario, replace: bool = False) -> Scenario:
+    if scenario.name in SCENARIOS and not replace:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+register(Scenario(
+    name="paper-hadoop",
+    description="Sec VII.B Google/Hadoop-trace mix, Poisson arrivals",
+    classes=_PAPER_CLASSES,
+    n_jobs=2700,
+))
+
+register(Scenario(
+    name="heavy-tail",
+    description="beta ~ 1 stress mix: stragglers dominate, speculation "
+                "is most valuable",
+    classes=(
+        JobClass(name="short-fat", weight=0.7, mean_tasks=60.0,
+                 sigma_tasks=1.8, t_min_range=(5.0, 10.0),
+                 beta_range=(1.05, 1.25), deadline_ratio=3.0),
+        JobClass(name="long-fat", weight=0.3, mean_tasks=600.0,
+                 sigma_tasks=2.0, t_min_range=(8.0, 15.0),
+                 beta_range=(1.05, 1.15), deadline_ratio=4.0),
+    ),
+))
+
+register(Scenario(
+    name="diurnal-burst",
+    description="paper mix on a sinusoidal NHPP (day/night swing)",
+    classes=_PAPER_CLASSES,
+    arrival="diurnal",
+    arrival_kw={"amplitude": 0.85, "period": 86400.0},
+    hours=48.0,
+))
+
+register(Scenario(
+    name="multi-tenant-sla",
+    description="gold/silver/bronze tenants: per-tier theta, deadlines, "
+                "prices -> per-class r*",
+    classes=(
+        JobClass(name="gold", weight=0.2, mean_tasks=200.0,
+                 sigma_tasks=0.9, t_min_range=(8.0, 12.0),
+                 beta_range=(1.2, 1.8), deadline_ratio=1.5,
+                 theta_scale=0.2, price=2.0),
+        JobClass(name="silver", weight=0.5, mean_tasks=300.0,
+                 sigma_tasks=1.0, t_min_range=(8.0, 15.0),
+                 beta_range=(1.2, 1.8), deadline_ratio=2.0,
+                 theta_scale=1.0, price=1.0),
+        JobClass(name="bronze", weight=0.3, mean_tasks=400.0,
+                 sigma_tasks=1.1, t_min_range=(8.0, 15.0),
+                 beta_range=(1.1, 1.6), deadline_ratio=3.0,
+                 theta_scale=5.0, price=0.5),
+    ),
+))
+
+register(Scenario(
+    name="flash-crowd",
+    description="batch-Poisson crowds (~25 jobs/burst) of interactive "
+                "jobs",
+    classes=(
+        JobClass(name="crowd", weight=0.8, mean_tasks=50.0,
+                 sigma_tasks=0.7, t_min_range=(5.0, 10.0),
+                 beta_range=(1.3, 2.0), deadline_ratio=1.8),
+        JobClass(name="background", weight=0.2, mean_tasks=500.0,
+                 sigma_tasks=1.2, t_min_range=(8.0, 15.0),
+                 beta_range=(1.1, 1.6), deadline_ratio=3.0),
+    ),
+    arrival="batch",
+    arrival_kw={"mean_batch": 25.0},
+    hours=12.0,
+))
+
+
+def list_scenarios() -> dict:
+    """name -> one-line description of every registered scenario."""
+    return {name: s.description for name, s in sorted(SCENARIOS.items())}
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        known = ", ".join(sorted(SCENARIOS))
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}")
+    return SCENARIOS[name]
+
+
+def make_trace(name: str, n_jobs: Optional[int] = None,
+               seed: Optional[int] = None) -> WorkloadTrace:
+    """Synthesize the named scenario's trace (size/seed overridable)."""
+    s = get_scenario(name)
+    return synthesize(
+        s.classes, n_jobs=s.n_jobs if n_jobs is None else n_jobs,
+        seed=s.seed if seed is None else seed,
+        arrival=s.arrival, hours=s.hours, arrival_kw=s.arrival_kw)
+
+
+def make_jobset(name: str, n_jobs: Optional[int] = None,
+                seed: Optional[int] = None):
+    """Resolve a scenario name to a ready-to-run JobSet."""
+    return to_jobset(make_trace(name, n_jobs=n_jobs, seed=seed))

@@ -1,0 +1,156 @@
+"""Columnar workload traces: compact schema, .npz persistence, synthesis.
+
+A `WorkloadTrace` is the offline, jit-friendly form of a workload: eight
+arrival-sorted per-job numpy columns plus the class-name table. It is the
+contract between generation (`generators.py` / `registry.py`), storage
+(`save_trace` / `load_trace` — one flat ``.npz``), and execution
+(`to_jobset` feeds both `sim.runner.run_all` and
+`cluster.engine.run_cluster` through the shared `sim.trace.build_jobset`
+flat layout).
+
+`synthesize` draws a trace from a class mixture + arrival process with
+key-split JAX samplers. `PAPER_TRACE_STATS` records the Hadoop/Google
+trace statistics the paper simulates (Section VII.B); the `paper-hadoop`
+registry scenario is calibrated against it, and
+`summarize(trace)` returns the same statistics for any trace so
+calibration is checkable offline (see tests/test_workloads.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..sim.trace import JobSet, build_jobset
+from .generators import (
+    JobClass,
+    sample_arrivals,
+    sample_classes,
+    sample_pareto_params,
+    sample_task_counts,
+)
+
+# Trace-driven evaluation targets (paper Section VII.B): a Google-trace
+# mix of 2700 jobs / ~1M tasks over 30 hours, per-job Pareto execution
+# times with tail index in [1.1, 2.0], deadlines at 2x the mean task time.
+PAPER_TRACE_STATS = {
+    "n_jobs": 2700,
+    "total_tasks": 1_000_000,
+    "hours": 30.0,
+    "mean_tasks": 370.0,
+    "beta_range": (1.1, 2.0),
+    "deadline_ratio": 2.0,
+}
+
+TRACE_COLUMNS = (
+    "n_tasks", "t_min", "beta", "D", "arrival", "C", "theta_scale",
+    "job_class",
+)
+
+
+class WorkloadTrace(NamedTuple):
+    """Arrival-sorted per-job columns; the offline workload schema."""
+
+    n_tasks: np.ndarray       # (J,) int32
+    t_min: np.ndarray         # (J,) float32 Pareto scale
+    beta: np.ndarray          # (J,) float32 Pareto tail index
+    D: np.ndarray             # (J,) float32 relative deadline (s)
+    arrival: np.ndarray       # (J,) float32 seconds from trace start
+    C: np.ndarray             # (J,) float32 VM price
+    theta_scale: np.ndarray   # (J,) float32 SLA-weight multiplier
+    job_class: np.ndarray     # (J,) int32 index into class_names
+    class_names: Tuple[str, ...]
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.n_tasks.shape[0])
+
+    @property
+    def total_tasks(self) -> int:
+        return int(self.n_tasks.sum())
+
+
+def to_jobset(trace: WorkloadTrace) -> JobSet:
+    """Lower a trace to the flat JobSet both engines execute."""
+    return build_jobset(
+        trace.n_tasks, trace.t_min, trace.beta, trace.D, trace.arrival,
+        trace.C, job_class=trace.job_class, theta_scale=trace.theta_scale)
+
+
+def save_trace(trace: WorkloadTrace, path) -> None:
+    """Persist to one compressed .npz (columns + class-name table)."""
+    np.savez_compressed(
+        path,
+        class_names=np.asarray(trace.class_names),
+        **{c: getattr(trace, c) for c in TRACE_COLUMNS})
+
+
+def load_trace(path) -> WorkloadTrace:
+    with np.load(path, allow_pickle=False) as z:
+        cols = {c: z[c] for c in TRACE_COLUMNS}
+        names = tuple(str(s) for s in z["class_names"])
+    return WorkloadTrace(class_names=names, **cols)
+
+
+def synthesize(classes: Sequence[JobClass], n_jobs: int, seed: int = 0,
+               arrival: str = "poisson", hours: float = 30.0,
+               arrival_kw: Optional[dict] = None) -> WorkloadTrace:
+    """Draw a WorkloadTrace from a class mixture + arrival process.
+
+    The long-run job rate is n_jobs / (hours * 3600) unless the arrival
+    process overrides it via arrival_kw["rate"]. Columns come back
+    arrival-sorted (the JobSet contract).
+    """
+    if not classes:
+        raise ValueError("need at least one JobClass")
+    if n_jobs <= 0:
+        raise ValueError(f"n_jobs must be positive, got {n_jobs}")
+    k_mix, k_cnt, k_par, k_arr = jax.random.split(
+        jax.random.PRNGKey(seed), 4)
+    cls = sample_classes(k_mix, n_jobs, classes)
+    n_tasks = sample_task_counts(k_cnt, cls, classes)
+    t_min, beta, D = sample_pareto_params(k_par, cls, classes)
+
+    kw = dict(arrival_kw or {})
+    rate = kw.pop("rate", n_jobs / (hours * 3600.0))
+    arrivals = sample_arrivals(k_arr, n_jobs, arrival, rate, **kw)
+
+    cls_np = np.asarray(cls)
+    price = np.asarray([c.price for c in classes], np.float32)[cls_np]
+    theta_scale = np.asarray(
+        [c.theta_scale for c in classes], np.float32)[cls_np]
+
+    order = np.argsort(np.asarray(arrivals), kind="stable")
+    col = lambda x: np.asarray(x)[order]
+    return WorkloadTrace(
+        n_tasks=col(n_tasks).astype(np.int32),
+        t_min=col(t_min).astype(np.float32),
+        beta=col(beta).astype(np.float32),
+        D=col(D).astype(np.float32),
+        arrival=col(arrivals).astype(np.float32),
+        C=price[order],
+        theta_scale=theta_scale[order],
+        job_class=cls_np[order].astype(np.int32),
+        class_names=tuple(c.name for c in classes),
+    )
+
+
+def summarize(trace: WorkloadTrace) -> dict:
+    """The PAPER_TRACE_STATS-shaped summary of a trace (calibration
+    check: compare against the target the scenario claims to match)."""
+    span_h = float(trace.arrival.max() - trace.arrival.min()) / 3600.0
+    mix = {
+        name: float((trace.job_class == i).mean())
+        for i, name in enumerate(trace.class_names)
+    }
+    return {
+        "n_jobs": trace.n_jobs,
+        "total_tasks": trace.total_tasks,
+        "hours": span_h,
+        "mean_tasks": float(trace.n_tasks.mean()),
+        "beta_range": (float(trace.beta.min()), float(trace.beta.max())),
+        "arrival_rate_per_s": trace.n_jobs / max(span_h * 3600.0, 1e-9),
+        "class_mix": mix,
+    }

@@ -1,7 +1,6 @@
 """Test session config. Tests run on the single real CPU device — only the
 dry-run (and subprocess-isolated tests) request placeholder devices, per the
 brief. `slow` marks the production-mesh compile test."""
-import pytest
 
 
 def pytest_configure(config):

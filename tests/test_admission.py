@@ -1,0 +1,215 @@
+"""Dedicated coverage for cluster/admission.py: the windowed offered-load
+estimate, the load-adaptive r* governor, and deadline-aware admission —
+unit tests plus a hypothesis property (admitted jobs never exceed the
+slot pool's estimated service capacity).
+
+hypothesis is an optional test extra; the property skips cleanly when it
+is not installed (same pattern as tests/test_properties.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.admission import (
+    AdmissionConfig,
+    GovernorConfig,
+    admit_jobs,
+    apply_governor,
+    offered_load,
+)
+from repro.sim import SimParams, uniform_jobset
+from repro.sim.runner import jobspecs_of
+from repro.sim.trace import build_jobset
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+
+
+def _jobset(arrival, n_tasks=10, t_min=10.0, beta=2.0, D=50.0):
+    arrival = np.asarray(arrival, np.float32)
+    n = arrival.shape[0]
+    ones = np.ones(n, np.float32)
+    return build_jobset(
+        np.full(n, n_tasks, np.int32), t_min * ones, beta * ones,
+        D * ones, arrival, ones)
+
+
+def _mean_work(jobs):
+    """N * E[Pareto] per job, the load unit admission reasons in."""
+    beta = np.asarray(jobs.beta, np.float64)
+    t_min = np.asarray(jobs.t_min, np.float64)
+    n = np.asarray(jobs.n_tasks, np.float64)
+    return n * t_min * beta / (beta - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# offered_load
+# ---------------------------------------------------------------------------
+
+
+def test_offered_load_isolated_jobs():
+    """Jobs spaced wider than the window each see only their own work:
+    rho = N * E[T] / (slots * window), exactly."""
+    window, slots = 100.0, 10
+    jobs = _jobset([0.0, 1000.0, 2000.0])
+    rho = offered_load(jobs, slots, window)
+    expected = _mean_work(jobs) / (slots * window)
+    np.testing.assert_allclose(rho, expected, rtol=1e-12)
+
+
+def test_offered_load_accumulates_within_window():
+    """Simultaneous arrivals stack: the k-th job (stable arrival order)
+    sees the cumulative work of jobs 1..k."""
+    jobs = _jobset([0.0, 0.0, 0.0])
+    rho = offered_load(jobs, 5, 100.0)
+    w = _mean_work(jobs)
+    np.testing.assert_allclose(rho, np.cumsum(w) / (5 * 100.0), rtol=1e-12)
+
+
+def test_offered_load_decreases_with_slots():
+    jobs = _jobset(np.linspace(0, 50, 20))
+    lo = offered_load(jobs, 10, 100.0)
+    hi = offered_load(jobs, 100, 100.0)
+    assert np.all(hi <= lo)
+    np.testing.assert_allclose(lo, 10.0 * hi, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# governor
+# ---------------------------------------------------------------------------
+
+
+def test_governor_identity_below_threshold():
+    """Uncongested traces leave theta untouched (scale = 1 exactly)."""
+    jobs = _jobset([0.0, 5000.0, 10000.0])
+    specs = jobspecs_of(jobs, P, 1e-4)
+    out = apply_governor(
+        specs, jobs, slots=10_000, cfg=GovernorConfig(util_threshold=0.7))
+    np.testing.assert_array_equal(
+        np.asarray(out.theta), np.asarray(specs.theta))
+
+
+def test_governor_inflates_theta_under_load():
+    jobs = uniform_jobset(100, 50, t_min=10.0, beta=2.0, D=50.0)
+    specs = jobspecs_of(jobs, P, 1e-4)
+    cfg = GovernorConfig(util_threshold=0.05, gain=10.0, window=600.0)
+    out = apply_governor(specs, jobs, slots=10, cfg=cfg)
+    theta0 = np.asarray(specs.theta)
+    theta1 = np.asarray(out.theta)
+    assert np.all(theta1 >= theta0)
+    assert theta1.max() > theta0.max()
+    # only theta changes; everything else Algorithm 1 sees is untouched
+    np.testing.assert_array_equal(np.asarray(out.D), np.asarray(specs.D))
+    np.testing.assert_array_equal(np.asarray(out.N), np.asarray(specs.N))
+
+
+def test_governor_gain_monotone():
+    jobs = uniform_jobset(100, 50, t_min=10.0, beta=2.0, D=50.0)
+    specs = jobspecs_of(jobs, P, 1e-4)
+    mk = lambda g: np.asarray(apply_governor(
+        specs, jobs, 10,
+        GovernorConfig(util_threshold=0.05, gain=g, window=600.0)).theta)
+    assert np.all(mk(20.0) >= mk(2.0))
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_accepts_everything_when_uncongested():
+    jobs = _jobset(np.linspace(0, 10_000, 20))
+    admitted = admit_jobs(jobs, 1000, AdmissionConfig(slack=1.0))
+    assert admitted.all()
+
+
+def test_admission_rejects_exactly_the_hopeless():
+    """Decision matches an independent numpy recomputation of the
+    estimated backlog wait: reject iff wait_est > slack * D."""
+    rng = np.random.default_rng(7)
+    arrival = np.sort(rng.uniform(0, 500, 60)).astype(np.float32)
+    jobs = _jobset(arrival, n_tasks=10)
+    slots, cfg = 10, AdmissionConfig(slack=0.5, window=200.0)
+    admitted = admit_jobs(jobs, slots, cfg)
+
+    w = _mean_work(jobs)
+    a = np.asarray(jobs.arrival, np.float64)
+    wait = np.empty_like(a)
+    for j in range(len(a)):
+        in_win = (a <= a[j]) & (a > a[j] - cfg.window)
+        served = min(a[j] - a[0], cfg.window)
+        wait[j] = max(w[in_win].sum() / slots - served, 0.0)
+    expected = wait <= cfg.slack * np.asarray(jobs.D, np.float64)
+    np.testing.assert_array_equal(admitted, expected)
+    assert 0 < admitted.sum() < jobs.n_jobs   # the case is discriminating
+
+
+def test_admission_monotone_in_slots():
+    rng = np.random.default_rng(3)
+    arrival = np.sort(rng.uniform(0, 300, 50)).astype(np.float32)
+    jobs = _jobset(arrival, n_tasks=40)
+    cfg = AdmissionConfig(slack=0.5, window=200.0)
+    few = admit_jobs(jobs, 5, cfg)
+    many = admit_jobs(jobs, 50, cfg)
+    assert np.all(few <= many)   # more capacity never rejects more
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: admitted work never exceeds slot capacity
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional test extra; unit tests above still run
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    trace_params = st.fixed_dictionaries({
+        "n_jobs": st.integers(3, 40),
+        "span": st.floats(1.0, 2000.0),
+        "n_tasks": st.integers(1, 60),
+        "t_min": st.floats(1.0, 20.0),
+        "beta": st.floats(1.1, 3.0),
+        "D": st.floats(5.0, 500.0),
+        "slots": st.integers(1, 200),
+        "slack": st.floats(0.05, 2.0),
+        "window": st.floats(10.0, 5000.0),
+        "seed": st.integers(0, 2**16),
+    })
+
+
+def _check_admitted_capacity(p):
+    """For every admitted job, the windowed work of *admitted* jobs fits
+    the pool's estimated service capacity over the window plus the
+    allowed deadline slack:
+
+        W_admitted(j) <= slots * (min(a_j - a_0, window) + slack * D_j)
+
+    i.e. admission never over-commits the slot pool beyond the configured
+    slack — the capacity invariant the deadline-aware filter exists for.
+    """
+    rng = np.random.default_rng(p["seed"])
+    arrival = np.sort(rng.uniform(0, p["span"], p["n_jobs"]))
+    jobs = _jobset(arrival.astype(np.float32), n_tasks=p["n_tasks"],
+                   t_min=p["t_min"], beta=p["beta"], D=p["D"])
+    cfg = AdmissionConfig(slack=p["slack"], window=p["window"])
+    admitted = admit_jobs(jobs, p["slots"], cfg)
+
+    w = _mean_work(jobs)
+    a = np.asarray(jobs.arrival, np.float64)
+    for j in np.flatnonzero(admitted):
+        in_win = (a <= a[j]) & (a > a[j] - cfg.window)
+        w_adm = w[in_win & admitted].sum()
+        served = min(a[j] - a[0], cfg.window)
+        cap = p["slots"] * (served + cfg.slack * float(jobs.D[j]))
+        assert w_adm <= cap * (1.0 + 1e-9) + 1e-6
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_admitted_jobs_never_exceed_capacity():
+    prop = given(trace_params)(_check_admitted_capacity)
+    prop = settings(max_examples=40, deadline=None)(prop)
+    prop()

@@ -3,7 +3,6 @@ mask variants the archs use. This is the §Perf 'blockattn' lever."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

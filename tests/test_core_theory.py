@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import (JobSpec, pocd_clone, pocd_srestart, pocd_sresume,
                         cost_clone, cost_srestart, cost_sresume, gamma,
-                        pocd_of, cost_of, theory)
+                        pocd_of, theory)
 
 T_MIN, BETA, D, N = 10.0, 2.0, 50.0, 10
 TAU_EST, TAU_KILL, PHI = 3.0, 8.0, 0.4

@@ -3,7 +3,6 @@ single real production-mesh cell compiled in a subprocess (512 host devices)."""
 import json
 import subprocess
 import sys
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (JobSpec, pocd_of, cost_of, utility, solve_grid,
-                        gamma, theory, handoff_offset)
-from repro.core.pareto import sf, cdf, mean, min_of_n_mean
+                        theory, handoff_offset)
+from repro.core.pareto import sf, min_of_n_mean
 
 # bounded, physically meaningful parameter space
 job_params = st.fixed_dictionaries({

@@ -1,5 +1,4 @@
 """Runtime substrates: speculation, governor, checkpoint, pipeline, elastic."""
-import os
 import time
 
 import jax
@@ -8,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.runtime import (SpeculativeTaskRunner, StepGovernor,
-                           GovernorConfig, Telemetry)
+                           GovernorConfig)
 from repro.runtime import elastic
 from repro.ckpt import checkpoint as ckpt
 from repro.data import DataPipeline, PipelineConfig, make_shard, assemble
@@ -35,7 +34,6 @@ def _make_task(durations, work_units=20):
 
 
 def test_clone_strategy_races_attempts():
-    rng = np.random.default_rng(0)
     durations = [0.05] * 6
     runner = SpeculativeTaskRunner(max_workers=24)
     res = runner.run(_make_task(durations), 6, strategy="clone", r=1,
@@ -47,10 +45,8 @@ def test_clone_strategy_races_attempts():
 def test_srestart_speculates_on_straggler():
     durations = [0.02, 0.02, 2.0, 0.02]   # task 2 is a straggler
     runner = SpeculativeTaskRunner(max_workers=16)
-    t0 = time.monotonic()
     res = runner.run(_make_task(durations), 4, strategy="srestart", r=1,
                      deadline=1.0, tau_est=0.15, tau_kill=0.5)
-    wall = time.monotonic() - t0
     assert all(r.value == ("ok", r.index) for r in res)
     # without speculation the straggler alone takes 2s; restart still reruns
     # from scratch (~2s) so only assert completion + speculation flag
@@ -204,7 +200,6 @@ def test_pipeline_host_sharding():
 
 
 def test_shrink_mesh_preserves_model_axis():
-    devs = np.arange(8)   # pretend 4x2 mesh
     mesh = elastic.shrink_mesh(np.array(jax.devices() * 8)[:8].reshape(4, 2),
                                data=4, model=2, lost=2)
     assert mesh.devices.shape == (3, 2)

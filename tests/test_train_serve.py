@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.train import Trainer, TrainerConfig, make_train_step, TrainState
-from repro.train.optimizer import AdamW, Adafactor, make_optimizer
+from repro.train.optimizer import Adafactor, make_optimizer
 from repro.models import model as model_lib
 from repro.models.param import values_of
 from repro.models.inputs import make_batch

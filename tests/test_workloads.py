@@ -1,0 +1,253 @@
+"""Workload subsystem: generator statistics (class mix, arrival rate,
+Pareto tail index), trace schema round-trips, registry resolution, and
+heterogeneous-trace equivalence between the jit and host replay backends."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.engine import build_strategy_table, replay
+from repro.sim import SimParams, run_all, run_strategy
+from repro.sim.strategies import _pareto
+from repro.workloads import (
+    JobClass,
+    PAPER_TRACE_STATS,
+    batch_poisson_arrivals,
+    diurnal_arrivals,
+    get_scenario,
+    hill_estimator,
+    list_scenarios,
+    load_trace,
+    make_jobset,
+    make_trace,
+    mmpp_arrivals,
+    poisson_arrivals,
+    sample_classes,
+    save_trace,
+    summarize,
+    synthesize,
+    to_jobset,
+)
+
+KEY = jax.random.PRNGKey(0)
+P = SimParams()
+
+MIX_CLASSES = (
+    JobClass(name="a", weight=0.6, mean_tasks=50.0, sigma_tasks=0.8,
+             t_min_range=(8.0, 12.0), beta_range=(1.5, 1.5),
+             deadline_ratio=2.0),
+    JobClass(name="b", weight=0.3, mean_tasks=200.0, sigma_tasks=1.0,
+             t_min_range=(8.0, 12.0), beta_range=(1.5, 1.5),
+             deadline_ratio=2.0),
+    JobClass(name="c", weight=0.1, mean_tasks=800.0, sigma_tasks=1.2,
+             t_min_range=(8.0, 12.0), beta_range=(1.5, 1.5),
+             deadline_ratio=2.0),
+)
+
+
+# ---------------------------------------------------------------------------
+# generator statistics
+# ---------------------------------------------------------------------------
+
+
+def test_class_mix_matches_weights():
+    cls = np.asarray(sample_classes(KEY, 6000, MIX_CLASSES))
+    # binomial sigma at n=6000: ~0.006; 4-sigma tolerance
+    for i, c in enumerate(MIX_CLASSES):
+        assert (cls == i).mean() == pytest.approx(c.weight, abs=0.03)
+
+
+def test_poisson_arrival_rate():
+    rate = 0.05
+    arr = np.asarray(poisson_arrivals(KEY, 4000, rate))
+    assert np.all(np.diff(arr) >= 0)
+    empirical = len(arr) / arr[-1]
+    assert empirical == pytest.approx(rate, rel=0.1)
+
+
+def test_batch_arrivals_form_crowds_at_target_rate():
+    rate, mean_batch = 0.05, 20.0
+    arr = np.asarray(batch_poisson_arrivals(KEY, 4000, rate, mean_batch))
+    uniq, counts = np.unique(arr, return_counts=True)
+    assert counts.max() > 5                       # real crowds exist
+    assert counts.mean() == pytest.approx(mean_batch, rel=0.3)
+    assert len(arr) / arr[-1] == pytest.approx(rate, rel=0.2)
+
+
+def test_diurnal_arrivals_modulate_rate():
+    base, period = 0.05, 3600.0
+    arr = np.asarray(diurnal_arrivals(
+        KEY, 6000, base, amplitude=0.9, period=period))
+    assert np.all(np.diff(arr) >= 0)
+    assert len(arr) / arr[-1] == pytest.approx(base, rel=0.15)
+    # peak-phase rate must exceed trough-phase rate (amplitude 0.9)
+    phase = (arr % period) / period
+    peak = ((phase > 0.1) & (phase < 0.4)).sum()     # sin > 0 region
+    trough = ((phase > 0.6) & (phase < 0.9)).sum()   # sin < 0 region
+    assert peak > 2.0 * trough
+
+
+def test_mmpp_arrivals_are_bursty():
+    rate = 0.105
+    arr = np.asarray(mmpp_arrivals(
+        KEY, 4000, rate, phase_shape=(20.0, 1.0), mean_dwell=2000.0))
+    assert np.all(np.diff(arr) >= 0)
+    assert len(arr) / arr[-1] == pytest.approx(rate, rel=0.3)
+    # an ON/OFF process has a much larger gap CV than Poisson (CV = 1)
+    gaps = np.diff(arr)
+    cv = gaps.std() / gaps.mean()
+    assert cv > 1.3
+
+
+def test_mmpp_reachable_through_registry_dispatch():
+    """The dispatch path (scenario -> synthesize -> sample_arrivals) must
+    honor the shared rate contract for every registered process name."""
+    classes = MIX_CLASSES[:1]
+    tr = synthesize(classes, n_jobs=2000, seed=5, arrival="mmpp", hours=10.0,
+                    arrival_kw={"phase_shape": (5.0, 0.5),
+                                "mean_dwell": 1800.0})
+    rate = 2000 / (10.0 * 3600.0)
+    span = float(tr.arrival.max())
+    assert len(tr.arrival) / span == pytest.approx(rate, rel=0.35)
+
+
+def test_pareto_tail_index_recovered():
+    """Sampled task durations carry the tail the class promises: Hill
+    estimator over Pareto draws at the generated (t_min, beta) recovers
+    beta = 1.5 (the fixed beta of MIX_CLASSES)."""
+    tr = synthesize(MIX_CLASSES, n_jobs=2000, seed=3)
+    t_min = jnp.asarray(tr.t_min)
+    draws = _pareto(KEY, t_min, jnp.asarray(tr.beta), t_min.shape)
+    # normalize out the per-job scale so the pooled sample is Pareto(1, 1.5)
+    alpha = float(hill_estimator(draws / t_min, k=200))
+    assert alpha == pytest.approx(1.5, rel=0.15)
+
+
+def test_paper_hadoop_calibration():
+    """The paper-hadoop scenario tracks PAPER_TRACE_STATS: task-count
+    mean, beta support, and the 30-hour arrival horizon."""
+    tr = make_trace("paper-hadoop", n_jobs=2000)
+    s = summarize(tr)
+    assert s["mean_tasks"] == pytest.approx(
+        PAPER_TRACE_STATS["mean_tasks"], rel=0.25)
+    lo, hi = PAPER_TRACE_STATS["beta_range"]
+    assert lo <= s["beta_range"][0] and s["beta_range"][1] <= hi
+    assert s["hours"] == pytest.approx(
+        PAPER_TRACE_STATS["hours"], rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# trace schema + registry
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip(tmp_path):
+    tr = make_trace("multi-tenant-sla", n_jobs=200)
+    path = tmp_path / "trace.npz"
+    save_trace(tr, path)
+    tr2 = load_trace(path)
+    for col in tr._fields[:-1]:
+        np.testing.assert_array_equal(getattr(tr, col), getattr(tr2, col))
+    assert tr2.class_names == tr.class_names
+    # identical JobSets either way
+    a, b = to_jobset(tr), to_jobset(tr2)
+    np.testing.assert_array_equal(np.asarray(a.job_id), np.asarray(b.job_id))
+    np.testing.assert_array_equal(
+        np.asarray(a.task_t_min), np.asarray(b.task_t_min))
+
+
+def test_to_jobset_layout():
+    tr = make_trace("heavy-tail", n_jobs=150)
+    jobs = to_jobset(tr)
+    assert jobs.total_tasks == int(tr.n_tasks.sum())
+    counts = np.bincount(np.asarray(jobs.job_id), minlength=jobs.n_jobs)
+    np.testing.assert_array_equal(counts, tr.n_tasks)
+    np.testing.assert_array_equal(
+        np.asarray(jobs.task_beta),
+        tr.beta[np.asarray(jobs.job_id)])
+    assert np.all(np.diff(tr.arrival) >= 0)
+
+
+def test_registry_presets_resolve():
+    names = set(list_scenarios())
+    assert {"paper-hadoop", "heavy-tail", "diurnal-burst",
+            "multi-tenant-sla", "flash-crowd"} <= names
+    for name in names:
+        jobs = make_jobset(name, n_jobs=30)
+        assert jobs.n_jobs == 30
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+def test_multi_tenant_has_three_classes_and_heterogeneous_deadlines():
+    jobs = make_jobset("multi-tenant-sla", n_jobs=200)
+    assert len(np.unique(np.asarray(jobs.job_class))) >= 3
+    ratio = np.asarray(jobs.D) / (
+        np.asarray(jobs.t_min) * np.asarray(jobs.beta)
+        / (np.asarray(jobs.beta) - 1.0))
+    assert ratio.min() < 1.6 and ratio.max() > 2.5   # per-tier 1.5/2.0/3.0
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous execution: per-class r*, engine equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tenant_jobs():
+    return make_jobset("multi-tenant-sla", n_jobs=120)
+
+
+def test_run_all_accepts_scenario(tenant_jobs):
+    """run_all takes a registry scenario (by JobSet or by name) with >= 3
+    classes and heterogeneous deadlines."""
+    outs, r_min = run_all(KEY, tenant_jobs, P, theta=1e-4)
+    assert set(outs) == {"hadoop_ns", "hadoop_s", "mantri",
+                         "clone", "srestart", "sresume"}
+    for o in outs.values():
+        assert 0.0 <= float(o.result.pocd) <= 1.0
+    assert 0.0 <= r_min <= 1.0
+
+
+def test_per_class_r_star(tenant_jobs):
+    """theta_scale is plumbed into the batched Algorithm-1 solve: the
+    cheap-speculation gold tier lands a weakly larger r* than the
+    expensive bronze tier."""
+    out = run_strategy(KEY, tenant_jobs, "sresume", P, theta=1e-4)
+    cls = np.asarray(tenant_jobs.job_class)
+    r = np.asarray(out.r_opt)
+    gold, bronze = r[cls == 0].mean(), r[cls == 2].mean()
+    assert gold > bronze
+
+
+def test_theta_scale_ones_bit_identical():
+    """A homogeneous trace (theta_scale = 1) is unchanged by the
+    heterogeneity plumbing: scalar-theta multiply is a float32 identity."""
+    from repro.sim import uniform_jobset
+    jobs = uniform_jobset(200, 10, t_min=10.0, beta=2.0, D=50.0)
+    out = run_strategy(KEY, jobs, "sresume", P, theta=1e-3)
+    assert np.asarray(jobs.theta_scale).min() == 1.0
+    specs_theta = 1e-3 * np.asarray(jobs.theta_scale, np.float32)
+    np.testing.assert_array_equal(
+        specs_theta, np.full(200, 1e-3, np.float32))
+    assert 0.0 <= float(out.result.pocd) <= 1.0
+
+
+@pytest.mark.parametrize("discipline", ["fifo", "edf"])
+def test_jit_host_agree_on_heterogeneous_trace(tenant_jobs, discipline):
+    """Draw-for-draw backend equivalence holds on a heterogeneous
+    multi-class trace, not just the uniform JobSets of test_cluster."""
+    table, race = build_strategy_table(
+        KEY, tenant_jobs, "sresume", P, theta=1e-3, max_r=6)
+    for slots in (60, 30_000):
+        rh, rel_h, st_h = replay(table, race, tenant_jobs, slots,
+                                 discipline=discipline, backend="host")
+        rj, rel_j, st_j = replay(table, race, tenant_jobs, slots,
+                                 discipline=discipline, backend="jit")
+        np.testing.assert_array_equal(np.asarray(st_h), np.asarray(st_j))
+        np.testing.assert_array_equal(np.asarray(rel_h), np.asarray(rel_j))
+        np.testing.assert_array_equal(
+            np.asarray(rh.task_completion), np.asarray(rj.task_completion))
+        np.testing.assert_array_equal(
+            np.asarray(rh.task_machine), np.asarray(rj.task_machine))
