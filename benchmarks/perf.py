@@ -62,6 +62,42 @@ def bench_sim_throughput(n_jobs=2700, reps=8):
     return dt, jobs.total_tasks * reps / dt
 
 
+def bench_strategy_dispatch(n_jobs=80, iters=3):
+    """One compiled run_strategy call per registered spec — times the
+    strategy-IR dispatch path (registry lookup, uniform draw signature,
+    composite solve) end-to-end across the whole registry."""
+    from repro.strategies import names
+
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+    all_names = names()
+
+    def run():
+        for name in all_names:
+            out = run_strategy(key, jobs, name, p, theta=1e-4)
+            jax.block_until_ready(out.result.pocd)
+
+    dt = _time(run, iters=iters)
+    return dt, len(all_names) / dt     # strategies dispatched per second
+
+
+def bench_new_strategy(name, n_jobs=300, reps=4, iters=3):
+    """Full compiled pipeline for one registry-defined strategy (the PR-4
+    additions `hedge` / `adaptive` are tracked so the gate guards the new
+    dispatch layer's codegen)."""
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        out = run_strategy(key, jobs, name, p, theta=1e-4, reps=reps)
+        jax.block_until_ready(out.result.pocd)
+
+    dt = _time(run, iters=iters)
+    return dt, jobs.total_tasks * reps / dt
+
+
 def bench_cluster_replay(n_jobs=300, slots=2000, reps=8, iters=2):
     """Full compiled capacity pipeline (solve -> build -> replay -> metrics)
     with `reps` Monte-Carlo replications vmapped in one program.

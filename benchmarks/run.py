@@ -81,6 +81,16 @@ def perf_benches(perf, smoke: bool):
              lambda: perf.bench_pocd_kernel_all(J=200, N=8, R=4, iters=10)),
             ("workload_synthesize",
              lambda: perf.bench_workload_synthesize(n_jobs=400)),
+            # strategy-IR layer: full-registry dispatch sweep + the two
+            # registry-defined strategies added with the IR
+            ("strategy_dispatch",
+             lambda: perf.bench_strategy_dispatch(n_jobs=40, iters=2)),
+            ("strategy_hedge",
+             lambda: perf.bench_new_strategy("hedge", n_jobs=100, reps=2,
+                                             iters=3)),
+            ("strategy_adaptive",
+             lambda: perf.bench_new_strategy("adaptive", n_jobs=100, reps=2,
+                                             iters=3)),
         ]
     return [
         ("optimizer_batch_solve", perf.bench_optimizer_throughput),
@@ -90,6 +100,11 @@ def perf_benches(perf, smoke: bool):
         ("kernel_pocd_mc_all", perf.bench_pocd_kernel_all),
         ("kernel_flash_attention", perf.bench_flash_attention),
         ("workload_synthesize", perf.bench_workload_synthesize),
+        ("strategy_dispatch", perf.bench_strategy_dispatch),
+        ("strategy_hedge",
+         lambda: perf.bench_new_strategy("hedge")),
+        ("strategy_adaptive",
+         lambda: perf.bench_new_strategy("adaptive")),
     ]
 
 

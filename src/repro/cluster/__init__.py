@@ -15,7 +15,7 @@ draw-for-draw. See DESIGN.md §10 for the event encoding and capacity model.
 """
 from .admission import (AdmissionConfig, GovernorConfig, admit_jobs,
                         apply_governor, offered_load)
-from .engine import (ALL_STRATEGIES, ClusterOutput, QueueMetrics,
+from .engine import (ClusterOutput, QueueMetrics,
                      build_strategy_table, replay, run_cluster,
                      run_cluster_strategy)
 from .events import AttemptTable, Realized, dispatch_scan, masked_dispatch, \

@@ -1,6 +1,7 @@
 """Strategy execution under finite capacity.
 
-Each of the six strategies is lowered to an `AttemptTable` using *exactly the
+Every registered strategy (`repro.strategies`) is lowered to an
+`AttemptTable` by its spec's `build_table` closure, using *exactly the
 same* PRNG splits and Pareto draws as the flat simulator
 (`sim/strategies.py`), so at `slots=None` (infinite capacity) the cluster
 engine reproduces the flat results draw-for-draw; with finite slots the same
@@ -33,19 +34,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.optimizer import solve_batch_jit
 from ..sim.metrics import SimResult, aggregate, net_utility
-from ..sim.runner import jobspecs_of, mean_over_reps
-from ..sim.strategies import SimParams, _detect, _pareto, _rank_among_job
+from ..sim.runner import jobspecs_of, mean_over_reps, strategy_keys
+from ..sim.strategies import SimParams
 from ..sim.trace import JobSet, jobset_arrays, jobset_of
+from ..strategies import get, names, solve_jobs_jit
 from .admission import (AdmissionConfig, GovernorConfig, admit_jobs,
                         apply_governor)
 from .events import (AttemptTable, dispatch_scan, masked_dispatch,
                      predicted_holds, realize)
 from .slots import DISCIPLINES, dispatch_order, make_pool, utilization
-
-ALL_STRATEGIES = ("hadoop_ns", "hadoop_s", "mantri",
-                  "clone", "srestart", "sresume")
 
 
 class QueueMetrics(NamedTuple):
@@ -67,166 +65,28 @@ class ClusterOutput(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Strategy -> AttemptTable lowering (PRNG usage mirrors sim/strategies.py)
+# Strategy -> AttemptTable lowering: each spec's `build_table` closure
+# (repro.strategies.*) mirrors its flat simulator's PRNG usage exactly
 # ---------------------------------------------------------------------------
-
-
-def _assemble(jobs: JobSet, rel, dur, hold_cap, can_win, active) -> AttemptTable:
-    """Flatten (T, A) per-attempt arrays into a (T*A,) AttemptTable."""
-    T, A = dur.shape
-    flat = lambda x: jnp.broadcast_to(x, (T, A)).reshape(-1)
-    task_id = jnp.repeat(jnp.arange(T, dtype=jnp.int32), A)
-    is_primary = flat(jnp.arange(A)[None, :] == 0)
-    return AttemptTable(
-        task_id=task_id, job_id=jobs.job_id[task_id],
-        rel_offset=flat(rel).astype(jnp.float32),
-        dur=flat(dur).astype(jnp.float32),
-        hold_cap=flat(hold_cap).astype(jnp.float32),
-        can_win=flat(can_win), active=flat(active), is_primary=is_primary)
-
-
-def build_clone(key, jobs: JobSet, r_task, p: SimParams, max_r=8, oracle=True):
-    T = jobs.total_tasks
-    t_min, beta = jobs.task_t_min, jobs.task_beta
-    tau_kill = (p.tau_est_frac + p.tau_kill_gap_frac) * t_min
-    att = _pareto(key, t_min[:, None], beta[:, None], (T, max_r + 1))
-    slot = jnp.arange(max_r + 1)[None, :]
-    active = slot <= r_task[:, None]
-    table = _assemble(jobs, jnp.zeros((T, 1)), att, tau_kill[:, None],
-                      jnp.ones((T, 1), bool), active)
-    return table, False
-
-
-def build_srestart(key, jobs: JobSet, r_task, p: SimParams, max_r=8,
-                   oracle=True):
-    T = jobs.total_tasks
-    t_min, beta, D = jobs.task_t_min, jobs.task_beta, jobs.task_D
-    tau_est = p.tau_est_frac * t_min
-    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
-    k1, k2 = jax.random.split(key)
-    T1 = _pareto(k1, t_min, beta, (T,))
-    extras = _pareto(k2, t_min[:, None], beta[:, None], (T, max_r))
-    straggler = _detect(T1, t_min, D, tau_est, p, oracle)
-    slot = jnp.arange(max_r)[None, :]
-    spec_active = (slot < r_task[:, None]) & straggler[:, None]
-
-    rel = jnp.concatenate([jnp.zeros((T, 1)),
-                           jnp.broadcast_to(tau_est[:, None], (T, max_r))], 1)
-    dur = jnp.concatenate([T1[:, None], extras], 1)
-    # losing primary is killed at tau_kill; losing copies at tau_kill too,
-    # billed from their tau_est launch (Thm 3's r*(tau_kill - tau_est) term)
-    hold = jnp.concatenate([tau_kill[:, None],
-                            jnp.broadcast_to((tau_kill - tau_est)[:, None],
-                                             (T, max_r))], 1)
-    active = jnp.concatenate([jnp.ones((T, 1), bool), spec_active], 1)
-    table = _assemble(jobs, rel, dur, hold,
-                      jnp.ones((T, max_r + 1), bool), active)
-    return table, False
-
-
-def build_sresume(key, jobs: JobSet, r_task, p: SimParams, max_r=8,
-                  oracle=True):
-    T = jobs.total_tasks
-    t_min, beta, D = jobs.task_t_min, jobs.task_beta, jobs.task_D
-    tau_est = p.tau_est_frac * t_min
-    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
-    k1, k2 = jax.random.split(key)
-    T1 = _pareto(k1, t_min, beta, (T,))
-    fresh = _pareto(k2, t_min[:, None], beta[:, None], (T, max_r + 1))
-    resumed = jnp.maximum(t_min[:, None], (1.0 - p.phi_est) * fresh)
-    straggler = _detect(T1, t_min, D, tau_est, p, oracle)
-    slot = jnp.arange(max_r + 1)[None, :]
-    spec_active = (slot <= r_task[:, None]) & straggler[:, None]
-
-    rel = jnp.concatenate([jnp.zeros((T, 1)),
-                           jnp.broadcast_to(tau_est[:, None],
-                                            (T, max_r + 1))], 1)
-    dur = jnp.concatenate([T1[:, None], resumed], 1)
-    # a straggling primary is killed at tau_est (its work is handed off) and
-    # can never win; resumed losers are killed at tau_kill
-    hold = jnp.concatenate([jnp.where(straggler, tau_est, T1)[:, None],
-                            jnp.broadcast_to((tau_kill - tau_est)[:, None],
-                                             (T, max_r + 1))], 1)
-    can_win = jnp.concatenate([~straggler[:, None],
-                               jnp.ones((T, max_r + 1), bool)], 1)
-    active = jnp.concatenate([jnp.ones((T, 1), bool), spec_active], 1)
-    table = _assemble(jobs, rel, dur, hold, can_win, active)
-    return table, False
-
-
-def build_hadoop_ns(key, jobs: JobSet, p: SimParams):
-    T1 = _pareto(key, jobs.task_t_min, jobs.task_beta, (jobs.total_tasks,))
-    T = jobs.total_tasks
-    table = _assemble(jobs, jnp.zeros((T, 1)), T1[:, None],
-                      jnp.full((T, 1), jnp.inf),
-                      jnp.ones((T, 1), bool), jnp.ones((T, 1), bool))
-    return table, False
-
-
-def build_hadoop_s(key, jobs: JobSet, p: SimParams):
-    T = jobs.total_tasks
-    t_min, beta = jobs.task_t_min, jobs.task_beta
-    k1, k2 = jax.random.split(key)
-    T1 = _pareto(k1, t_min, beta, (T,))
-    T2 = _pareto(k2, t_min, beta, (T,))
-    t_first = jax.ops.segment_min(T1, jobs.job_id, jobs.n_jobs)[jobs.job_id]
-    delta = p.check_period_frac * t_min
-    rank = _rank_among_job(T1, jobs.job_id, jobs.n_jobs).astype(jnp.float32)
-    s_launch = t_first + (rank + 1.0) * delta
-
-    rel = jnp.stack([jnp.zeros((T,)), s_launch], 1)
-    dur = jnp.stack([T1, T2], 1)
-    active = jnp.stack([jnp.ones((T,), bool), T1 > s_launch], 1)
-    table = _assemble(jobs, rel, dur, jnp.full((T, 2), jnp.inf),
-                      jnp.ones((T, 2), bool), active)
-    return table, True  # race: loser runs until the task completes
-
-
-def build_mantri(key, jobs: JobSet, p: SimParams):
-    T = jobs.total_tasks
-    t_min, beta = jobs.task_t_min, jobs.task_beta
-    k1, k2 = jax.random.split(key)
-    T1 = _pareto(k1, t_min, beta, (T,))
-    mean_t = jax.ops.segment_sum(T1, jobs.job_id, jobs.n_jobs) / \
-        jnp.maximum(jobs.n_tasks.astype(jnp.float32), 1.0)
-    gate = mean_t[jobs.job_id] + p.mantri_gate_frac * t_min
-    extras = _pareto(k2, t_min[:, None], beta[:, None],
-                     (T, p.mantri_max_extra))
-    delta = p.check_period_frac * t_min
-    launch = gate[:, None] + delta[:, None] * \
-        jnp.arange(p.mantri_max_extra)[None, :]
-
-    rel = jnp.concatenate([jnp.zeros((T, 1)), launch], 1)
-    dur = jnp.concatenate([T1[:, None], extras], 1)
-    active = jnp.concatenate([jnp.ones((T, 1), bool), T1[:, None] > launch], 1)
-    A = p.mantri_max_extra + 1
-    table = _assemble(jobs, rel, dur, jnp.full((T, A), jnp.inf),
-                      jnp.ones((T, A), bool), active)
-    return table, True
-
-
-BUILDERS = {
-    "clone": build_clone, "srestart": build_srestart, "sresume": build_sresume,
-}
-BASELINE_BUILDERS = {
-    "hadoop_ns": build_hadoop_ns, "hadoop_s": build_hadoop_s,
-    "mantri": build_mantri,
-}
-# static mirror of each builder's returned `race` flag (losers of a race
-# strategy hold their slot until the task completes)
-RACE = {"hadoop_ns": False, "hadoop_s": True, "mantri": True,
-        "clone": False, "srestart": False, "sresume": False}
 
 
 def build_strategy_table(key, jobs: JobSet, strategy: str, p: SimParams,
                          theta=1e-4, r_min=0.0, max_r: int = 8):
     """(AttemptTable, race) for a strategy at its solved r* — the shared
     entry point for benchmarks and the replay-equivalence tests."""
-    if strategy in BASELINE_BUILDERS:
-        return BASELINE_BUILDERS[strategy](key, jobs, p)
+    spec = get(strategy)
+    T = jobs.total_tasks
+    if not spec.optimized:
+        zeros = jnp.zeros((T,), jnp.int32)
+        table = spec.build_table(key, jobs, zeros, zeros, p, max_r=max_r,
+                                 oracle=True)
+        return table, spec.race
     specs = jobspecs_of(jobs, p, theta, r_min)
-    r_j, _, _, _ = solve_batch_jit(strategy, specs, max_r + 1)
-    return BUILDERS[strategy](key, jobs, r_j[jobs.job_id], p, max_r=max_r)
+    r_j, choice_j, _, _, _ = solve_jobs_jit(strategy, specs, max_r + 1)
+    table = spec.build_table(key, jobs, r_j[jobs.job_id],
+                             choice_j[jobs.job_id], p, max_r=max_r,
+                             oracle=True)
+    return table, spec.race
 
 
 # ---------------------------------------------------------------------------
@@ -398,21 +258,23 @@ def _narrow_table(table: AttemptTable, n_tasks: int,
 @functools.partial(jax.jit, static_argnames=(
     "n_jobs", "strategy", "p", "slots", "discipline", "passes", "max_r",
     "oracle", "reps", "width"))
-def _cluster_core(key, arrays, theta, r_min, r_j, th_p, th_c, admitted, *,
-                  n_jobs: int, strategy: str, p: SimParams,
+def _cluster_core(key, arrays, theta, r_min, r_j, choice_j, th_p, th_c,
+                  admitted, *, n_jobs: int, strategy: str, p: SimParams,
                   slots: Optional[int], discipline: str, passes: int,
                   max_r: int, oracle: bool, reps: int,
                   width: Optional[int]) -> ClusterOutput:
     """Single compiled program per strategy: table build, capacity replay,
     and metric reductions, with `reps` MC replications vmapped over split
-    keys. r* enters as data (solved once per call by the cached
-    `solve_batch_jit` entry in the wrapper — it is replication-invariant
-    and its max also fixes the static table width)."""
+    keys. r* (and any composite-strategy choice) enters as data — solved
+    once per call by the cached `solve_jobs_jit` entry in the wrapper; it
+    is replication-invariant and its max also fixes the static width."""
     jobs = jobset_of(n_jobs, arrays)
     J = jobs.n_jobs
     T = jobs.total_tasks
+    spec = get(strategy)
     if r_j is None:
         r_j = jnp.zeros((J,), jnp.int32)
+        choice_j = jnp.zeros((J,), jnp.int32)
         th_p = jnp.zeros((J,))
         th_c = jnp.zeros((J,))
 
@@ -420,12 +282,9 @@ def _cluster_core(key, arrays, theta, r_min, r_j, th_p, th_c, admitted, *,
                      else jnp.mean(admitted.astype(jnp.float32)))
 
     def build_rep(k):
-        if strategy in BASELINE_BUILDERS:
-            table, race = BASELINE_BUILDERS[strategy](k, jobs, p)
-        else:
-            table, race = BUILDERS[strategy](k, jobs, r_j[jobs.job_id], p,
-                                             max_r=max_r, oracle=oracle)
-        assert race == RACE[strategy], (strategy, race)
+        table = spec.build_table(k, jobs, r_j[jobs.job_id],
+                                 choice_j[jobs.job_id], p, max_r=max_r,
+                                 oracle=oracle)
         if admitted is not None:
             table = table._replace(
                 active=table.active & admitted[table.job_id])
@@ -447,7 +306,7 @@ def _cluster_core(key, arrays, theta, r_min, r_j, th_p, th_c, admitted, *,
             admitted_frac=admitted_frac, slots=None)
         return res, queue
 
-    race = RACE[strategy]
+    race = spec.race
     if reps == 1:
         res, queue = replay_rep(build_rep(key), race, None)
     else:
@@ -492,12 +351,16 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
     if discipline not in DISCIPLINES:
         raise ValueError(f"unknown discipline {discipline!r}; "
                          f"expected one of {DISCIPLINES}")
-    r_j = th_p = th_c = None
-    if strategy not in BASELINE_BUILDERS:
+    if not get(strategy).detectable:
+        oracle = True     # oracle is static: don't compile a second
+        #                   identical program for detection-free strategies
+    r_j = choice_j = th_p = th_c = None
+    if get(strategy).optimized:
         specs = jobspecs_of(jobs, p, jnp.float32(theta), jnp.float32(r_min))
         if governor is not None and slots is not None:
             specs = apply_governor(specs, jobs, slots, governor)
-        r_j, _, th_p, th_c = solve_batch_jit(strategy, specs, max_r + 1)
+        r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
+                                                      max_r + 1)
         th_c = th_c * specs.C
         if width == "auto":
             width = int(jnp.max(r_j)) + 2
@@ -506,14 +369,14 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
     adm = None if admitted is None else jnp.asarray(admitted)
     out = _cluster_core(
         key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
-        r_j, th_p, th_c, adm, n_jobs=jobs.n_jobs, strategy=strategy, p=p,
-        slots=slots, discipline=discipline, passes=passes, max_r=max_r,
-        oracle=oracle, reps=reps, width=width)
+        r_j, choice_j, th_p, th_c, adm, n_jobs=jobs.n_jobs,
+        strategy=strategy, p=p, slots=slots, discipline=discipline,
+        passes=passes, max_r=max_r, oracle=oracle, reps=reps, width=width)
     return out._replace(queue=out.queue._replace(slots=slots))
 
 
 def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
-                theta=1e-4, strategies=ALL_STRATEGIES,
+                theta=1e-4, strategies=None,
                 r_min_from_ns: bool = True, max_r: int = 8,
                 oracle: bool = True, discipline: str = "fifo",
                 passes: int = 2,
@@ -523,15 +386,19 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
     """Finite-capacity mirror of `sim.runner.run_all`.
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
-    (resolved with that scenario's default size and seed). Returns
+    (resolved with that scenario's default size and seed). `strategies=None`
+    runs every registered strategy (`repro.strategies.names()`). Returns
     (outs, r_min) where outs maps strategy -> ClusterOutput. With
-    slots=None this reproduces run_all's results draw-for-draw (same key
-    splits); with finite slots the same draws queue on the bounded pool.
+    slots=None this reproduces run_all's results draw-for-draw (identical
+    per-name keys); with finite slots the same draws queue on the bounded
+    pool.
     """
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)
-    keys = jax.random.split(key, len(strategies))
+    if strategies is None:
+        strategies = names()
+    key_of = strategy_keys(key, strategies)
     admitted = None
     if admission is not None and slots is not None:
         admitted = admit_jobs(jobs, slots, admission)
@@ -540,13 +407,15 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
               admitted=admitted, reps=reps)
     outs = {}
     r_min = 0.0
-    for k, name in zip(keys, strategies):
-        if name == "hadoop_ns":
-            outs[name] = run_cluster_strategy(k, jobs, name, p, r_min=0.0, **kw)
-            if r_min_from_ns:
-                r_min = float(outs[name].result.pocd) - 1e-3
-    for k, name in zip(keys, strategies):
+    if "hadoop_ns" in strategies:
+        outs["hadoop_ns"] = run_cluster_strategy(key_of["hadoop_ns"], jobs,
+                                                 "hadoop_ns", p, r_min=0.0,
+                                                 **kw)
+        if r_min_from_ns:
+            r_min = float(outs["hadoop_ns"].result.pocd) - 1e-3
+    for name in strategies:
         if name == "hadoop_ns":
             continue
-        outs[name] = run_cluster_strategy(k, jobs, name, p, r_min=r_min, **kw)
+        outs[name] = run_cluster_strategy(key_of[name], jobs, name, p,
+                                          r_min=r_min, **kw)
     return outs, r_min

@@ -31,19 +31,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..strategies.table import AttemptTable
 from .slots import SlotPool, dispatch_key_order, make_pool
-
-
-class AttemptTable(NamedTuple):
-    """Flat per-attempt-unit arrays, (U,) each. U = total_tasks * width."""
-    task_id: jnp.ndarray      # int32 — flat task index
-    job_id: jnp.ndarray       # int32
-    rel_offset: jnp.ndarray   # f32 — ARRIVAL offset from the primary's start
-    dur: jnp.ndarray          # f32 — time from start to FINISH
-    hold_cap: jnp.ndarray     # f32 — KILL: slot-hold if the unit loses
-    can_win: jnp.ndarray      # bool — may its FINISH complete the task?
-    active: jnp.ndarray       # bool — does this unit ever dispatch?
-    is_primary: jnp.ndarray   # bool
 
 
 class Realized(NamedTuple):

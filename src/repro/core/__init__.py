@@ -5,11 +5,11 @@ optimization (Section V, Algorithm 1), startup-aware completion estimation and
 work-preserving handoff (Section VI).
 """
 from .pareto import ParetoParams, pdf, cdf, sf, mean, sample, fit_mle, min_of_n_mean
-from .pocd import pocd, pocd_clone, pocd_srestart, pocd_sresume
-from .cost import cost, cost_clone, cost_srestart, cost_sresume
+from .pocd import pocd_clone, pocd_srestart, pocd_sresume
+from .cost import cost_clone, cost_srestart, cost_sresume
 from .utility import JobSpec, utility, gamma, pocd_of, cost_of
 from .optimizer import (Solution, solve, solve_grid, solve_batch,
-                        solve_batch_jit, solve_algorithm1, STRATEGIES)
+                        solve_batch_jit, solve_algorithm1)
 from .estimator import (ProgressReport, estimate_completion_chronos,
                         estimate_completion_naive, is_straggler, handoff_offset)
 from . import theory
@@ -17,10 +17,10 @@ from . import multiwave
 
 __all__ = [
     "ParetoParams", "pdf", "cdf", "sf", "mean", "sample", "fit_mle",
-    "min_of_n_mean", "pocd", "pocd_clone", "pocd_srestart", "pocd_sresume",
-    "cost", "cost_clone", "cost_srestart", "cost_sresume", "JobSpec",
+    "min_of_n_mean", "pocd_clone", "pocd_srestart", "pocd_sresume",
+    "cost_clone", "cost_srestart", "cost_sresume", "JobSpec",
     "utility", "gamma", "pocd_of", "cost_of", "Solution", "solve",
     "solve_grid", "solve_batch", "solve_batch_jit", "solve_algorithm1",
-    "STRATEGIES", "ProgressReport", "estimate_completion_chronos", "multiwave",
+    "ProgressReport", "estimate_completion_chronos", "multiwave",
     "estimate_completion_naive", "is_straggler", "handoff_offset", "theory",
 ]

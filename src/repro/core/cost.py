@@ -120,14 +120,6 @@ def cost_sresume(r, t_min, beta, D, N, tau_est, tau_kill, phi_est):
     e_slow = tau_est + r * (tau_kill - tau_est) + e_win
     return N * (e_fast * (1.0 - p_s) + e_slow * p_s)
 
-
-def cost(strategy: str, r, t_min, beta, D, N, tau_est=None, tau_kill=None,
-         phi_est=None):
-    """Dispatch by strategy name: 'clone' | 'srestart' | 'sresume'."""
-    if strategy == "clone":
-        return cost_clone(r, t_min, beta, D, N, tau_kill)
-    if strategy == "srestart":
-        return cost_srestart(r, t_min, beta, D, N, tau_est, tau_kill)
-    if strategy == "sresume":
-        return cost_sresume(r, t_min, beta, D, N, tau_est, tau_kill, phi_est)
-    raise ValueError(f"unknown strategy {strategy!r}")
+# Name-keyed dispatch lives in the strategy IR: `repro.strategies.get(name)`
+# carries each strategy's cost closure (this module's closed forms for the
+# paper trio); `core.utility.cost_of` is the JobSpec-level entry.

@@ -25,8 +25,6 @@ import numpy as np
 
 from .utility import JobSpec, gamma, utility, pocd_of, cost_of
 
-STRATEGIES = ("clone", "srestart", "sresume")
-
 
 class Solution(NamedTuple):
     strategy: str
@@ -44,17 +42,17 @@ class Solution(NamedTuple):
 def r_upper_bound(strategy: str, job: JobSpec, u_floor) -> int:
     """Smallest R such that U(r) < u_floor for all r >= R.
 
-    U(r) <= lg(1 - R_min) - theta*C*slope*r, where `slope` lower-bounds the
-    marginal machine-time of one extra attempt:
-      clone:    N * tau_kill                  (every task kills r clones at tau_kill)
-      reactive: N * p_straggler * (tau_kill - tau_est)
+    U(r) <= lg(1 - R_min) - theta*C*slope*r, where the spec's `r_slope`
+    lower-bounds the marginal machine-time of one extra attempt (clone:
+    N * tau_kill — every task kills r clones; reactive strategies:
+    N * p_straggler * (tau_kill - tau_est)).
     """
-    p_s = float(np.power(float(job.t_min) / float(job.D), float(job.beta)))
-    if strategy == "clone":
-        slope = float(job.N) * float(job.tau_kill)
-    else:
-        slope = float(job.N) * p_s * (float(job.tau_kill) - float(job.tau_est))
-    slope *= float(job.theta) * float(job.C)
+    from ..strategies import get
+    spec = get(strategy)
+    if spec.r_slope is None:
+        raise ValueError(f"strategy {strategy!r} has no certified grid "
+                         f"bound (r_slope)")
+    slope = spec.r_slope(job) * float(job.theta) * float(job.C)
     cap = float(np.log10(max(1.0 - float(job.R_min), 1e-30)))
     if slope <= 0.0 or not np.isfinite(u_floor):
         return 64
@@ -85,8 +83,15 @@ def solve_grid(strategy: str, job: JobSpec, r_max: int | None = None) -> Solutio
                     float(cost_of(strategy, r, job)))
 
 
-def solve(job: JobSpec, strategies=STRATEGIES) -> Solution:
-    """Best (strategy, r) pair for a job."""
+def solve(job: JobSpec, strategies=None) -> Solution:
+    """Best (strategy, r) pair for a job.
+
+    `strategies=None` sweeps every registered Chronos strategy
+    (`repro.strategies.names(kind="chronos")`).
+    """
+    if strategies is None:
+        from ..strategies import names
+        strategies = names(kind="chronos")
     best = None
     for s in strategies:
         sol = solve_grid(s, job)
@@ -98,19 +103,14 @@ def solve(job: JobSpec, strategies=STRATEGIES) -> Solution:
 def solve_batch(strategy: str, jobs: JobSpec, r_max: int = 64):
     """Vectorized exact solve for a batch of jobs (stacked JobSpec leaves).
 
-    Returns (r_opt[int32], utility, pocd, cost) arrays. jit-compiled; the grid
-    bound r_max must be >= the certified bound for correctness (64 covers every
-    configuration the paper sweeps; the governor asserts via r_upper_bound).
+    Returns (r_opt[int32], utility, pocd, cost) arrays — a thin wrapper over
+    the strategy IR's `grid_solve` on the named spec. jit-compiled; the grid
+    bound r_max must be >= the certified bound for correctness (64 covers
+    every configuration the paper sweeps; the governor asserts via
+    r_upper_bound).
     """
-    def one(job):
-        rs = jnp.arange(r_max, dtype=jnp.float32)
-        us = utility(strategy, rs, job)
-        i = jnp.argmax(us)
-        r = rs[i]
-        return (i.astype(jnp.int32), us[i], pocd_of(strategy, r, job),
-                cost_of(strategy, r, job))
-
-    return jax.vmap(one)(jobs)
+    from ..strategies import get, grid_solve
+    return grid_solve(get(strategy), jobs, r_max)
 
 
 solve_batch_jit = jax.jit(solve_batch, static_argnums=(0, 2))

@@ -102,13 +102,6 @@ def pocd_sresume(r, t_min, beta, D, N, tau_est, phi_est):
     lf = log_task_fail_sresume(r, t_min, beta, D, tau_est, phi_est)
     return _job_pocd_from_log_fail(lf, N)
 
-
-def pocd(strategy: str, r, t_min, beta, D, N, tau_est=None, phi_est=None):
-    """Dispatch by strategy name: 'clone' | 'srestart' | 'sresume'."""
-    if strategy == "clone":
-        return pocd_clone(r, t_min, beta, D, N)
-    if strategy == "srestart":
-        return pocd_srestart(r, t_min, beta, D, N, tau_est)
-    if strategy == "sresume":
-        return pocd_sresume(r, t_min, beta, D, N, tau_est, phi_est)
-    raise ValueError(f"unknown strategy {strategy!r}")
+# Name-keyed dispatch lives in the strategy IR: `repro.strategies.get(name)`
+# carries each strategy's log_task_fail closure (this module's closed forms
+# for the paper trio); `core.utility.pocd_of` is the JobSpec-level entry.

@@ -1,19 +1,24 @@
-"""Net utility U(r) and concavity thresholds — paper Section V, Theorem 8.
+"""Net utility U(r) and strategy dispatch over the unified IR.
 
   U(r) = f(R(r) - R_min) - theta * C * E[T](r),   f = lg (log10, proportional
   fairness per the paper), with U = -inf whenever R(r) <= R_min.
 
-Gamma thresholds (Thm 8) mark where R(r) becomes concave in r; Algorithm 1
-exploits concavity above Gamma and brute-forces the (few) integers below it.
+`pocd_of` / `cost_of` / `utility` / `gamma` dispatch by strategy name
+through the `repro.strategies` registry: each registered StrategySpec
+carries its closed-form closures (the paper trio's live in `core.pocd` /
+`core.cost`; Thm-8 gamma thresholds in `repro.strategies.chronos`), so any
+strategy registered in the IR — including user-defined ones — optimizes
+through Algorithm 1 with no edits here.
+
+Layering: `repro.strategies` imports this package's leaf math, so the
+registry imports below are deliberately lazy (function-local) — a
+sys.modules hit at trace time, never a module-level cycle.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
 import jax.numpy as jnp
-
-from .pocd import pocd as _pocd_dispatch
-from .cost import cost as _cost_dispatch
 
 NEG_INF = -jnp.inf
 
@@ -45,62 +50,26 @@ class JobSpec(NamedTuple):
 
 
 def pocd_of(strategy: str, r, job: JobSpec):
-    return _pocd_dispatch(strategy, r, job.t_min, job.beta, job.D, job.N,
-                          tau_est=job.tau_est, phi_est=job.phi_est)
+    from ..strategies import get, pocd_of_spec
+    return pocd_of_spec(get(strategy), r, job)
 
 
 def cost_of(strategy: str, r, job: JobSpec):
-    return _cost_dispatch(strategy, r, job.t_min, job.beta, job.D, job.N,
-                          tau_est=job.tau_est, tau_kill=job.tau_kill,
-                          phi_est=job.phi_est)
+    from ..strategies import cost_of_spec, get
+    return cost_of_spec(get(strategy), r, job)
 
 
 def utility(strategy: str, r, job: JobSpec):
     """U(r) = lg(R(r) - R_min) - theta * C * E[T]; -inf below the SLA floor."""
-    R = pocd_of(strategy, r, job)
-    E = cost_of(strategy, r, job)
-    gap = R - job.R_min
-    log_term = jnp.where(gap > 0.0, jnp.log10(jnp.maximum(gap, 1e-30)), NEG_INF)
-    return log_term - job.theta * job.C * E
-
-
-# ---------------------------------------------------------------------------
-# Theorem 8 concavity thresholds
-# ---------------------------------------------------------------------------
-
-
-def gamma_clone(job: JobSpec):
-    """Gamma_Clone = -1/beta * log_{t_min/D} N - 1  (R concave for r > Gamma).
-
-    Equivalent to: R_Clone(r) is concave iff (t_min/D)^(beta(r+1)) <= 1/N.
-    """
-    log_ratio = jnp.log(job.t_min / job.D)  # < 0
-    return -jnp.log(job.N) / (job.beta * log_ratio) - 1.0
-
-
-def gamma_srestart(job: JobSpec):
-    """Gamma_S-Restart = 1/beta * log_{t_min/(D-tau)} (D^beta / (N t_min^beta)).
-
-    Concavity condition: task failure prob q(r) <= 1/N, i.e.
-    (t_min/D)^beta * (t_min/(D-tau))^(beta r) <= 1/N.
-    """
-    lr = jnp.log(job.t_min / (job.D - job.tau_est))  # < 0
-    target = job.beta * jnp.log(job.D / job.t_min) - jnp.log(job.N)
-    return target / (job.beta * lr)
-
-
-def gamma_sresume(job: JobSpec):
-    """Gamma_S-Resume: same condition with the resumed-attempt failure ratio."""
-    lr = jnp.log1p(-job.phi_est) + jnp.log(job.t_min / (job.D - job.tau_est))
-    target = job.beta * jnp.log(job.D / job.t_min) - jnp.log(job.N)
-    return target / (job.beta * lr) - 1.0
+    from ..strategies import get, utility_of
+    return utility_of(get(strategy), r, job)
 
 
 def gamma(strategy: str, job: JobSpec):
-    if strategy == "clone":
-        return gamma_clone(job)
-    if strategy == "srestart":
-        return gamma_srestart(job)
-    if strategy == "sresume":
-        return gamma_sresume(job)
-    raise ValueError(f"unknown strategy {strategy!r}")
+    """Thm-8 concavity threshold of the named strategy's PoCD."""
+    from ..strategies import get
+    spec = get(strategy)
+    if spec.gamma is None:
+        raise ValueError(f"strategy {strategy!r} has no concavity threshold "
+                         f"(Algorithm 1's gradient phase needs one)")
+    return spec.gamma(job)

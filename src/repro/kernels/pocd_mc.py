@@ -37,8 +37,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..strategies import get, names
+
 JOB_TILE = 128
-MODES = ("clone", "srestart", "sresume")
+# Every strategy with a Pallas tile body is a kernel mode; the tile
+# closures live on the specs (repro.strategies.chronos). MODES is an
+# import-time snapshot of the registry — it sizes static (n_modes, J)
+# kernel shapes — so a tile-armed strategy must be registered before this
+# module is first imported to join the fused sweep.
+MODES = tuple(n for n in names() if get(n).tile_outcome is not None)
 
 
 def _strategy_outcome(att, t_min, tau_est, tau_kill, D, r, *, mode: str,
@@ -46,42 +53,13 @@ def _strategy_outcome(att, t_min, tau_est, tau_kill, D, r, *, mode: str,
     """(completion, machine), both (Jt, N), from shared Pareto draws.
 
     att: (Jt, N, R) attempt times; t_min: (Jt, 1, 1); tau_est/tau_kill:
-    (Jt, N); D/r: (Jt, 1).
+    (Jt, N); D/r: (Jt, 1). The body is the mode's spec `tile_outcome`.
     """
-    Jt, N, R = att.shape
-
-    if mode == "clone":
-        slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R), 2)
-        active = slot <= r[:, :, None]
-        best = jnp.min(jnp.where(active, att, jnp.inf), axis=2)
-        completion = best
-        machine = r.astype(att.dtype) * tau_kill + best
-    elif mode == "srestart":
-        T1 = att[:, :, 0]
-        strag = T1 > D
-        extra_slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R - 1), 2)
-        active = (extra_slot < r[:, :, None]) & strag[:, :, None]
-        extras = jnp.min(jnp.where(active, att[:, :, 1:], jnp.inf), axis=2)
-        w_all = jnp.minimum(T1 - tau_est, extras)
-        use = strag & (r > 0)
-        completion = jnp.where(use, tau_est + w_all, T1)
-        machine = jnp.where(
-            use, tau_est + r.astype(att.dtype) * (tau_kill - tau_est) + w_all,
-            T1)
-    elif mode == "sresume":
-        T1 = att[:, :, 0]
-        strag = T1 > D
-        resumed = jnp.maximum(t_min, (1.0 - phi) * att[:, :, 1:])
-        extra_slot = jax.lax.broadcasted_iota(jnp.int32, (Jt, N, R - 1), 2)
-        active = (extra_slot <= r[:, :, None]) & strag[:, :, None]
-        w_new = jnp.min(jnp.where(active, resumed, jnp.inf), axis=2)
-        completion = jnp.where(strag, tau_est + w_new, T1)
-        machine = jnp.where(
-            strag, tau_est + r.astype(att.dtype) * (tau_kill - tau_est) + w_new,
-            T1)
-    else:
-        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
-    return completion, machine
+    spec = get(mode)
+    if spec.tile_outcome is None:
+        raise ValueError(f"strategy {mode!r} has no Pallas tile body; "
+                         f"kernel modes: {MODES}")
+    return spec.tile_outcome(att, t_min, tau_est, tau_kill, D, r, phi=phi)
 
 
 def _tile_prelude(u_ref, tmin_ref, beta_ref, D_ref, n_jobs: int):

@@ -53,8 +53,9 @@ def pocd_mc_ref(u, t_min, beta, D, r, *, mode="clone", tau_est_frac=0.3,
 def pocd_mc_all_ref(u, t_min, beta, D, r_modes, *, tau_est_frac=0.3,
                     tau_kill_gap_frac=0.5, phi=0.25):
     """Oracle for kernels.pocd_mc_all — per-mode pocd_mc_ref, stacked."""
+    from .pocd_mc import MODES
     mets, costs = [], []
-    for m, mode in enumerate(("clone", "srestart", "sresume")):
+    for m, mode in enumerate(MODES):
         met, cost = pocd_mc_ref(u, t_min, beta, D, r_modes[m], mode=mode,
                                 tau_est_frac=tau_est_frac,
                                 tau_kill_gap_frac=tau_kill_gap_frac, phi=phi)

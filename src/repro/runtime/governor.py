@@ -13,7 +13,7 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
-from ..core import (JobSpec, fit_mle, solve_grid, Solution, STRATEGIES)
+from ..core import (JobSpec, fit_mle, solve_grid, Solution)
 from .telemetry import Telemetry
 
 
@@ -28,7 +28,8 @@ class GovernorConfig:
     tau_kill_gap_frac: float = 0.5
     phi_est: float = 0.25
     min_samples: int = 8            # before this, fall back to defaults
-    strategies: tuple = STRATEGIES
+    strategies: Optional[tuple] = None  # None = every registered Chronos
+    #                                     strategy (names(kind="chronos"))
     max_r: int = 8
 
 
@@ -73,8 +74,12 @@ class StepGovernor:
         if spec is None:
             self.last = Solution("sresume", 0, 0.0, 0.0, 0.0)
             return self.last
+        strategies = self.cfg.strategies
+        if strategies is None:
+            from ..strategies import names
+            strategies = names(kind="chronos")
         best = None
-        for s in self.cfg.strategies:
+        for s in strategies:
             sol = solve_grid(s, spec, r_max=self.cfg.max_r + 1)
             if best is None or sol.utility > best.utility:
                 best = sol

@@ -5,6 +5,11 @@ vectorized exact grid solve), then the strategy simulator executes the whole
 trace and empirical PoCD / cost / net utility are aggregated — the pipeline
 behind Figures 2-5 and Tables I-II.
 
+Strategies are resolved through the unified IR (`repro.strategies`): the
+spec's `draw` closure is the single Monte-Carlo execution entry (uniform
+signature, no per-strategy branching here), its grid solve supplies r* and —
+for composite strategies like `adaptive` — the per-job sub-strategy choice.
+
 The whole pipeline is one compiled program per strategy (`_run_core` is
 jitted with the strategy, trace shape, and SimParams static): Algorithm-1
 solve, Pareto draws, execution, and segment reductions all fuse, so repeated
@@ -20,22 +25,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..core.utility import JobSpec
-from ..core.optimizer import solve_batch
+from ..core.utility import JobSpec, pocd_of, cost_of
+from ..strategies import get, index_of, names, solve_jobs
 from . import strategies as S
 from .metrics import aggregate, net_utility, SimResult
 from .trace import JobSet, jobset_arrays, jobset_of
-
-STRATEGY_SIMS = {
-    "clone": S.sim_clone,
-    "srestart": S.sim_srestart,
-    "sresume": S.sim_sresume,
-}
-BASELINE_SIMS = {
-    "hadoop_ns": S.sim_hadoop_ns,
-    "hadoop_s": S.sim_hadoop_s,
-    "mantri": S.sim_mantri,
-}
 
 
 class RunOutput(NamedTuple):
@@ -65,17 +59,11 @@ def jobspecs_of(jobs: JobSet, p: S.SimParams, theta, r_min=0.0) -> JobSpec:
         R_min=jnp.full((J,), r_min, jnp.float32))
 
 
-def _mc_exec(key, jobs: JobSet, strategy: str, r_task, p: S.SimParams,
-             max_r: int, oracle: bool) -> SimResult:
+def _mc_exec(key, jobs: JobSet, strategy: str, r_task, choice_task,
+             p: S.SimParams, max_r: int, oracle: bool) -> SimResult:
     """One Monte-Carlo replication: draws -> execution -> job metrics."""
-    if strategy in BASELINE_SIMS:
-        completion, machine = BASELINE_SIMS[strategy](key, jobs, p)
-    elif strategy == "clone":
-        completion, machine = STRATEGY_SIMS[strategy](
-            key, jobs, r_task, p, max_r=max_r)
-    else:
-        completion, machine = STRATEGY_SIMS[strategy](
-            key, jobs, r_task, p, max_r=max_r, oracle=oracle)
+    completion, machine = get(strategy).draw(
+        key, jobs, r_task, choice_task, p, max_r=max_r, oracle=oracle)
     return aggregate(jobs, completion, machine)
 
 
@@ -95,23 +83,30 @@ def _run_core(key, arrays, theta, r_min, r_override, *, n_jobs: int,
               reps: int) -> RunOutput:
     jobs = jobset_of(n_jobs, arrays)
     J = jobs.n_jobs
-    if strategy in BASELINE_SIMS:
+    spec = get(strategy)
+    if not spec.optimized:
         r_j = jnp.zeros((J,), jnp.int32)
+        choice_j = jnp.zeros((J,), jnp.int32)
         th_p = jnp.zeros((J,))
         th_c = jnp.zeros((J,))
     else:
         specs = jobspecs_of(jobs, p, theta, r_min)
         if r_override is not None:
-            from ..core.utility import pocd_of, cost_of
             r_j = jnp.broadcast_to(r_override, (J,)).astype(jnp.int32)
-            th_p = pocd_of(strategy, r_j.astype(jnp.float32), specs)
-            th_c = cost_of(strategy, r_j.astype(jnp.float32), specs) * specs.C
+            rf = r_j.astype(jnp.float32)
+            choice_j = (jnp.zeros((J,), jnp.int32) if spec.choose is None
+                        else spec.choose(rf, specs))
+            th_p = pocd_of(strategy, rf, specs)
+            th_c = cost_of(strategy, rf, specs) * specs.C
         else:
-            r_j, _, th_p, th_c = solve_batch(strategy, specs, r_max=max_r + 1)
+            r_j, choice_j, _, th_p, th_c = solve_jobs(
+                strategy, specs, max_r + 1)
             th_c = th_c * specs.C
 
     r_task = r_j[jobs.job_id]
-    mc = lambda k: _mc_exec(k, jobs, strategy, r_task, p, max_r, oracle)
+    choice_task = choice_j[jobs.job_id]
+    mc = lambda k: _mc_exec(k, jobs, strategy, r_task, choice_task, p,
+                            max_r, oracle)
     if reps == 1:
         res = mc(key)
     else:
@@ -131,6 +126,9 @@ def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
     (the key is used directly, not split). reps>1 averages the SimResult
     over replications (job_met becomes a per-job met frequency).
     """
+    if not get(strategy).detectable:
+        oracle = True     # oracle is static: don't compile a second
+        #                   identical program for detection-free strategies
     return _run_core(
         key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
         None if r_override is None else jnp.int32(r_override),
@@ -138,30 +136,42 @@ def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
         oracle=oracle, reps=reps)
 
 
-def run_all(key, jobs, p: S.SimParams, theta=1e-4,
-            strategies=("hadoop_ns", "hadoop_s", "mantri",
-                        "clone", "srestart", "sresume"),
+def strategy_keys(key, strategies) -> dict:
+    """Per-strategy PRNG keys, assigned by *name* (not position).
+
+    Each strategy folds its stable registry index into the caller's key, so
+    subsetting, reordering, or registering new strategies can never silently
+    change another strategy's draws.
+    """
+    return {name: jax.random.fold_in(key, index_of(name))
+            for name in strategies}
+
+
+def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
             r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1):
     """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper).
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
-    (resolved with that scenario's default size and seed).
+    (resolved with that scenario's default size and seed). `strategies=None`
+    runs every registered strategy (`repro.strategies.names()`).
     """
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)
-    keys = jax.random.split(key, len(strategies))
+    if strategies is None:
+        strategies = names()
+    key_of = strategy_keys(key, strategies)
     outs = {}
     r_min = 0.0
-    for k, name in zip(keys, strategies):
-        if name == "hadoop_ns":
-            outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=0.0,
-                                      reps=reps)
-            if r_min_from_ns:
-                r_min = float(outs[name].result.pocd) - 1e-3
-    for k, name in zip(keys, strategies):
+    if "hadoop_ns" in strategies:
+        outs["hadoop_ns"] = run_strategy(key_of["hadoop_ns"], jobs,
+                                         "hadoop_ns", p, theta=theta,
+                                         r_min=0.0, reps=reps)
+        if r_min_from_ns:
+            r_min = float(outs["hadoop_ns"].result.pocd) - 1e-3
+    for name in strategies:
         if name == "hadoop_ns":
             continue
-        outs[name] = run_strategy(k, jobs, name, p, theta=theta, r_min=r_min,
-                                  max_r=max_r, reps=reps)
+        outs[name] = run_strategy(key_of[name], jobs, name, p, theta=theta,
+                                  r_min=r_min, max_r=max_r, reps=reps)
     return outs, r_min

@@ -44,6 +44,7 @@ class SimParams(NamedTuple):
     check_period_frac: float = 0.5    # baseline check period, of t_min
     mantri_gate_frac: float = 1.0     # remaining > mean + gate*t_min
     mantri_max_extra: int = 3
+    hedge_quantile: float = 0.95      # hedge duplicate launch quantile
 
 
 # ---------------------------------------------------------------------------
@@ -112,16 +113,14 @@ def _detect(T1, t_min, D, tau_est, p: SimParams, oracle: bool):
     """Straggler detection at tau_est."""
     if oracle:
         return T1 > D
-    # Eq. 30 estimator with launch overhead: T1 = startup + work
+    # Eq. 30 estimator with launch overhead: T1 = startup + work. The
+    # extrapolated t_ect = startup + work == T1 (exact for linear progress);
+    # before any progress exists (tau_est <= startup) the estimator has
+    # nothing to extrapolate, so no task is flagged.
     startup = p.launch_overhead_frac * t_min
     work = jnp.maximum(T1 - startup, 1e-6)
-    progress = jnp.clip((tau_est - startup) / work, 1e-6, 1.0)
-    # chronos estimator: t_ect = startup + work-time extrapolation == T1 here
-    # (exact for linear progress), so estimator mode differs from oracle only
-    # for tasks that have not yet reported progress at tau_est.
-    t_ect = jnp.where(tau_est > startup, startup + work, jnp.inf)
-    del progress
-    return t_ect > D
+    t_ect = startup + work
+    return (tau_est > startup) & (t_ect > D)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,32 @@
+"""Unified strategy IR: one declarative spec per strategy, four lowerings.
+
+Every speculative-execution strategy is a single `StrategySpec` carrying its
+analytic closed forms, Monte-Carlo simulator, capacity AttemptTable builder,
+and (optionally) a Pallas tile body. `register()` / `get()` / `names()` are
+the only strategy enumeration in the codebase: the optimizer, the flat sim
+runner, the cluster engine, the MC kernels, benchmarks, and CLI flags all
+dispatch through this registry, so a new strategy (see `hedge.py` /
+`adaptive.py` for worked examples, DESIGN.md §13 for the recipe) plugs into
+`run_all`, `run_cluster`, workload scenarios, and the examples with zero
+edits outside its own module.
+
+Registration order is stable and keyed (`index_of`): the first six entries
+are the paper's strategies in their historical order, so their per-strategy
+PRNG keys — and therefore their draws — are unaffected by later additions.
+"""
+from .table import AttemptTable, assemble
+from .spec import (KINDS, StrategySpec, get, grid_solve, index_of, job_pocd,
+                   names, pocd_of_spec, cost_of_spec, register, solve_jobs,
+                   solve_jobs_jit, utility_of)
+# Registration order defines index_of() — append-only; keep the historical
+# six first (baselines, then the Chronos trio), new strategies after.
+from . import baselines as _baselines    # noqa: F401  hadoop_ns/hadoop_s/mantri
+from . import chronos as _chronos        # noqa: F401  clone/srestart/sresume
+from . import hedge as _hedge            # noqa: F401
+from . import adaptive as _adaptive      # noqa: F401
+
+__all__ = [
+    "AttemptTable", "assemble", "KINDS", "StrategySpec", "get", "grid_solve",
+    "index_of", "job_pocd", "names", "pocd_of_spec", "cost_of_spec",
+    "register", "solve_jobs", "solve_jobs_jit", "utility_of",
+]

@@ -1,0 +1,157 @@
+"""`adaptive` — the paper's unifying framework taken to its logical end.
+
+Per job, pick the (sub-strategy, r) pair with the best net utility across
+the three Chronos closed forms: U_adaptive(r) = max_s U_s(r), so the
+standard Algorithm-1 grid solve over r jointly maximizes over (s, r)
+(max_r max_s = max_s max_r). The chosen sub-strategy id travels with r*
+as the spec's `choose` output and selects each task's execution mode in
+both the flat MC draw and the AttemptTable lowering (cf. the multi-job
+speculative optimization of arXiv:1406.0609).
+
+Draw layout: one primary T1 (T,) plus one shared (T, max_r + 1) extras
+block, reinterpreted per chosen mode (clone: all from t = 0 alongside the
+primary; srestart: fresh restarts at tau_est; sresume: resumed remainders
+at tau_est). Distribution-identical to each pure strategy, and the table
+lowering consumes the exact same draws, so infinite-capacity replay
+matches the flat simulator draw-for-draw — same guarantee the built-ins
+have. Registered entirely inside this module.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sim.strategies import _detect, _pareto
+from .chronos import CLONE, SRESTART, SRESUME, slope_reactive
+from .spec import StrategySpec, register, utility_of
+from .table import assemble
+
+_SUBS = (CLONE, SRESTART, SRESUME)
+_I_CLONE, _I_SRESTART, _I_SRESUME = range(len(_SUBS))
+
+
+def _sub_utilities(r, job):
+    """(n_subs, ...) stacked U_s(r); argmax axis 0 is the per-element pick."""
+    return jnp.stack([utility_of(s, r, job) for s in _SUBS])
+
+
+def _select(vals, best):
+    """Pick vals[best] elementwise; vals (n_subs, ...), best (...,) int."""
+    flat = jnp.stack(vals)
+    return jnp.take_along_axis(flat, best[None, ...], axis=0)[0]
+
+
+def _log_task_fail(r, job):
+    best = jnp.argmax(_sub_utilities(r, job), axis=0)
+    return _select([s.log_task_fail(r, job) for s in _SUBS], best)
+
+
+def _cost(r, job):
+    best = jnp.argmax(_sub_utilities(r, job), axis=0)
+    return _select([s.cost(r, job) for s in _SUBS], best)
+
+
+def _choose(r, jobs):
+    """Per-job argmax sub-strategy id at the solved r (batched JobSpec)."""
+    return jnp.argmax(_sub_utilities(r, jobs), axis=0).astype(jnp.int32)
+
+
+def _draws(key, jobs, p, max_r):
+    """Shared draw layout: primary T1 + (T, max_r + 1) extras block."""
+    T = jobs.total_tasks
+    t_min, beta = jobs.task_t_min, jobs.task_beta
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    extras = _pareto(k2, t_min[:, None], beta[:, None], (T, max_r + 1))
+    return T1, extras
+
+
+def sim_adaptive(key, jobs, r_task, choice_task, p, *, max_r=8, oracle=True):
+    T = jobs.total_tasks
+    t_min, beta, D = jobs.task_t_min, jobs.task_beta, jobs.task_D
+    tau_est = p.tau_est_frac * t_min
+    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
+    T1, extras = _draws(key, jobs, p, max_r)
+    straggler = _detect(T1, t_min, D, tau_est, p, oracle)
+    slot = jnp.arange(max_r + 1)[None, :]
+    r = r_task
+    rf = r.astype(T1.dtype)
+
+    # clone: primary + extras all race from t = 0; killed clones bill tau_kill
+    att = jnp.concatenate([T1[:, None], extras[:, :max_r]], axis=1)
+    best_c = jnp.min(jnp.where(slot <= r[:, None], att, jnp.inf), axis=1)
+    comp_c, mach_c = best_c, rf * tau_kill + best_c
+
+    # srestart: r fresh restarts at tau_est for detected stragglers
+    act_r = (slot[:, :max_r] < r[:, None]) & straggler[:, None]
+    best_e = jnp.min(jnp.where(act_r, extras[:, :max_r], jnp.inf), axis=1)
+    w_all = jnp.minimum(T1 - tau_est, best_e)
+    use = straggler & (r > 0)
+    comp_r = jnp.where(use, tau_est + w_all, T1)
+    mach_r = jnp.where(use, tau_est + rf * (tau_kill - tau_est) + w_all, T1)
+
+    # sresume: original killed at tau_est; r+1 resumed attempts with floor
+    resumed = jnp.maximum(t_min[:, None], (1.0 - p.phi_est) * extras)
+    act_m = (slot <= r[:, None]) & straggler[:, None]
+    w_new = jnp.min(jnp.where(act_m, resumed, jnp.inf), axis=1)
+    comp_m = jnp.where(straggler, tau_est + w_new, T1)
+    mach_m = jnp.where(straggler,
+                       tau_est + rf * (tau_kill - tau_est) + w_new, T1)
+
+    completion = _select([comp_c, comp_r, comp_m], choice_task)
+    machine = _select([mach_c, mach_r, mach_m], choice_task)
+    return completion, machine
+
+
+def build_adaptive(key, jobs, r_task, choice_task, p, *, max_r=8,
+                   oracle=True):
+    """Width max_r + 2: primary + the shared extras block, with per-task
+    rel/dur/hold/can_win/active selected by the job's chosen mode. Each
+    column matches the corresponding pure builder exactly, so realized
+    billing reproduces `sim_adaptive` at infinite capacity."""
+    T = jobs.total_tasks
+    t_min, beta, D = jobs.task_t_min, jobs.task_beta, jobs.task_D
+    tau_est = p.tau_est_frac * t_min
+    tau_kill = tau_est + p.tau_kill_gap_frac * t_min
+    T1, extras = _draws(key, jobs, p, max_r)
+    straggler = _detect(T1, t_min, D, tau_est, p, oracle)
+    resumed = jnp.maximum(t_min[:, None], (1.0 - p.phi_est) * extras)
+    slot = jnp.arange(max_r + 1)[None, :]
+    r = r_task[:, None]
+    ch = choice_task[:, None]
+    is_clone = ch == _I_CLONE
+    is_rst = ch == _I_SRESTART
+    is_rsm = ch == _I_SRESUME
+
+    # primary column
+    prim_rel = jnp.zeros((T, 1))
+    prim_dur = T1[:, None]
+    prim_hold = jnp.where(is_rsm, jnp.where(straggler, tau_est, T1)[:, None],
+                          tau_kill[:, None])
+    prim_can_win = ~(is_rsm & straggler[:, None])
+    prim_active = jnp.ones((T, 1), bool)
+
+    # extras block (max_r + 1 columns, shared draws)
+    ex_rel = jnp.where(is_clone, 0.0, tau_est[:, None]) * jnp.ones_like(extras)
+    ex_dur = jnp.where(is_rsm, resumed, extras)
+    ex_hold = jnp.where(is_clone, tau_kill[:, None],
+                        (tau_kill - tau_est)[:, None]) * jnp.ones_like(extras)
+    ex_active = jnp.where(
+        is_clone, slot < r,
+        jnp.where(is_rst, (slot < r) & straggler[:, None],
+                  (slot <= r) & straggler[:, None]))
+
+    rel = jnp.concatenate([prim_rel, ex_rel], 1)
+    dur = jnp.concatenate([prim_dur, ex_dur], 1)
+    hold = jnp.concatenate([prim_hold, ex_hold], 1)
+    can_win = jnp.concatenate([prim_can_win,
+                               jnp.ones((T, max_r + 1), bool)], 1)
+    active = jnp.concatenate([prim_active, ex_active], 1)
+    return assemble(jobs, rel, dur, hold, can_win, active)
+
+
+ADAPTIVE = register(StrategySpec(
+    name="adaptive", kind="meta", race=False, detectable=True,
+    draw=sim_adaptive, build_table=build_adaptive,
+    log_task_fail=_log_task_fail, cost=_cost,
+    r_slope=slope_reactive, choose=_choose))

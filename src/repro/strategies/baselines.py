@@ -1,0 +1,86 @@
+"""Baseline specs: Hadoop-NS, default Hadoop speculation, Mantri.
+
+Baselines run at r = 0 (no Algorithm-1 solve, no analytic closed forms);
+their empirical MC simulators and AttemptTable lowerings reproduce
+`sim.strategies` draw-for-draw (see that module's docstring for the
+approximation notes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sim.strategies import (_pareto, _rank_among_job, sim_hadoop_ns,
+                              sim_hadoop_s, sim_mantri)
+from .spec import StrategySpec, register
+from .table import assemble
+
+
+def build_hadoop_ns(key, jobs, r_task, choice_task, p, *, max_r=8,
+                    oracle=True):
+    T1 = _pareto(key, jobs.task_t_min, jobs.task_beta, (jobs.total_tasks,))
+    T = jobs.total_tasks
+    return assemble(jobs, jnp.zeros((T, 1)), T1[:, None],
+                    jnp.full((T, 1), jnp.inf),
+                    jnp.ones((T, 1), bool), jnp.ones((T, 1), bool))
+
+
+def build_hadoop_s(key, jobs, r_task, choice_task, p, *, max_r=8,
+                   oracle=True):
+    T = jobs.total_tasks
+    t_min, beta = jobs.task_t_min, jobs.task_beta
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    T2 = _pareto(k2, t_min, beta, (T,))
+    t_first = jax.ops.segment_min(T1, jobs.job_id, jobs.n_jobs)[jobs.job_id]
+    delta = p.check_period_frac * t_min
+    rank = _rank_among_job(T1, jobs.job_id, jobs.n_jobs).astype(jnp.float32)
+    s_launch = t_first + (rank + 1.0) * delta
+
+    rel = jnp.stack([jnp.zeros((T,)), s_launch], 1)
+    dur = jnp.stack([T1, T2], 1)
+    active = jnp.stack([jnp.ones((T,), bool), T1 > s_launch], 1)
+    # race: the loser runs until the task completes
+    return assemble(jobs, rel, dur, jnp.full((T, 2), jnp.inf),
+                    jnp.ones((T, 2), bool), active)
+
+
+def build_mantri(key, jobs, r_task, choice_task, p, *, max_r=8, oracle=True):
+    T = jobs.total_tasks
+    t_min, beta = jobs.task_t_min, jobs.task_beta
+    k1, k2 = jax.random.split(key)
+    T1 = _pareto(k1, t_min, beta, (T,))
+    mean_t = jax.ops.segment_sum(T1, jobs.job_id, jobs.n_jobs) / \
+        jnp.maximum(jobs.n_tasks.astype(jnp.float32), 1.0)
+    gate = mean_t[jobs.job_id] + p.mantri_gate_frac * t_min
+    extras = _pareto(k2, t_min[:, None], beta[:, None],
+                     (T, p.mantri_max_extra))
+    delta = p.check_period_frac * t_min
+    launch = gate[:, None] + delta[:, None] * \
+        jnp.arange(p.mantri_max_extra)[None, :]
+
+    rel = jnp.concatenate([jnp.zeros((T, 1)), launch], 1)
+    dur = jnp.concatenate([T1[:, None], extras], 1)
+    active = jnp.concatenate([jnp.ones((T, 1), bool), T1[:, None] > launch], 1)
+    A = p.mantri_max_extra + 1
+    return assemble(jobs, rel, dur, jnp.full((T, A), jnp.inf),
+                    jnp.ones((T, A), bool), active)
+
+
+HADOOP_NS = register(StrategySpec(
+    name="hadoop_ns", kind="baseline", race=False, detectable=False,
+    draw=lambda key, jobs, r_task, choice_task, p, *, max_r, oracle:
+        sim_hadoop_ns(key, jobs, p),
+    build_table=build_hadoop_ns))
+
+HADOOP_S = register(StrategySpec(
+    name="hadoop_s", kind="baseline", race=True, detectable=False,
+    draw=lambda key, jobs, r_task, choice_task, p, *, max_r, oracle:
+        sim_hadoop_s(key, jobs, p),
+    build_table=build_hadoop_s))
+
+MANTRI = register(StrategySpec(
+    name="mantri", kind="baseline", race=True, detectable=False,
+    draw=lambda key, jobs, r_task, choice_task, p, *, max_r, oracle:
+        sim_mantri(key, jobs, p),
+    build_table=build_mantri))

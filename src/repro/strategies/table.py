@@ -1,0 +1,44 @@
+"""Attempt-table encoding — the unit every strategy lowers to under capacity.
+
+`AttemptTable` is the flat per-attempt-unit schema the cluster replay
+(`repro.cluster.events`) schedules: one row per potential attempt of a task,
+each row encoding its whole analytic lifecycle (release offset, duration,
+slot-hold cap, win eligibility). It lives here — in the strategy IR package —
+because it is the *target* of every `StrategySpec.build_table` lowering;
+`repro.cluster` re-exports it unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class AttemptTable(NamedTuple):
+    """Flat per-attempt-unit arrays, (U,) each. U = total_tasks * width."""
+    task_id: jnp.ndarray      # int32 — flat task index
+    job_id: jnp.ndarray       # int32
+    rel_offset: jnp.ndarray   # f32 — ARRIVAL offset from the primary's start
+    dur: jnp.ndarray          # f32 — time from start to FINISH
+    hold_cap: jnp.ndarray     # f32 — KILL: slot-hold if the unit loses
+    can_win: jnp.ndarray      # bool — may its FINISH complete the task?
+    active: jnp.ndarray       # bool — does this unit ever dispatch?
+    is_primary: jnp.ndarray   # bool
+
+
+def assemble(jobs, rel, dur, hold_cap, can_win, active) -> AttemptTable:
+    """Flatten (T, A) per-attempt arrays into a (T*A,) AttemptTable.
+
+    Layout contract (relied on by the replay's primary-slice fast path):
+    row t*A + a is attempt a of task t, and attempt 0 is the primary.
+    """
+    T, A = dur.shape
+    flat = lambda x: jnp.broadcast_to(x, (T, A)).reshape(-1)
+    task_id = jnp.repeat(jnp.arange(T, dtype=jnp.int32), A)
+    is_primary = flat(jnp.arange(A)[None, :] == 0)
+    return AttemptTable(
+        task_id=task_id, job_id=jobs.job_id[task_id],
+        rel_offset=flat(rel).astype(jnp.float32),
+        dur=flat(dur).astype(jnp.float32),
+        hold_cap=flat(hold_cap).astype(jnp.float32),
+        can_win=flat(can_win), active=flat(active), is_primary=is_primary)

@@ -232,8 +232,9 @@ def test_admission_rejects_hopeless_jobs():
 
 
 def test_run_cluster_mirrors_run_all_interface(small_jobs):
+    from repro.strategies import names
     outs, r_min = run_cluster(KEY, small_jobs, P, slots=200, theta=1e-3)
-    assert set(outs) == set(ALL)
+    assert set(outs) == set(names())
     for o in outs.values():
         assert 0.0 <= float(o.result.pocd) <= 1.0
         assert 0.0 <= float(o.queue.utilization) <= 1.0 + 1e-6

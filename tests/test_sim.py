@@ -93,6 +93,62 @@ def test_estimator_mode_close_to_oracle(uniform_jobs):
 
 
 # ---------------------------------------------------------------------------
+# estimator-mode detection (Eq. 30 startup-aware estimator)
+# ---------------------------------------------------------------------------
+
+
+def test_detect_estimator_extrapolates_t1():
+    """With progress available (tau_est > startup), the linear-progress
+    extrapolation recovers T1 exactly, so detection matches the oracle."""
+    from repro.sim.strategies import _detect
+
+    t_min = jnp.full((5,), 10.0)
+    D = jnp.full((5,), 50.0)
+    tau_est = P.tau_est_frac * t_min          # 3.0 > startup 2.0
+    T1 = jnp.asarray([12.0, 49.0, 51.0, 80.0, 500.0])
+    got = _detect(T1, t_min, D, tau_est, P, oracle=False)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(T1 > D))
+
+
+def test_detect_no_progress_before_startup():
+    """Launch-overhead edge: tau_est <= startup means no task has reported
+    progress at the check — the estimator cannot flag anything."""
+    from repro.sim.strategies import _detect
+
+    p = SimParams(launch_overhead_frac=0.5)   # startup 5.0 >= tau_est 3.0
+    t_min = jnp.full((4,), 10.0)
+    D = jnp.full((4,), 50.0)
+    tau_est = p.tau_est_frac * t_min
+    T1 = jnp.asarray([12.0, 60.0, 200.0, 1e4])   # even extreme stragglers
+    got = _detect(T1, t_min, D, tau_est, p, oracle=False)
+    assert not np.asarray(got).any()
+    # oracle mode is unaffected by the overhead
+    ora = _detect(T1, t_min, D, tau_est, p, oracle=True)
+    np.testing.assert_array_equal(np.asarray(ora), np.asarray(T1 > D))
+
+
+@pytest.mark.parametrize("strategy", ["srestart", "sresume"])
+def test_run_strategy_estimator_smoke(uniform_jobs, strategy):
+    """End-to-end estimator-mode run: with the default overhead (< tau_est)
+    the linear-progress estimator reproduces the oracle's draws exactly;
+    with overhead past tau_est nothing is detected, so reactive strategies
+    degrade toward no-speculation PoCD."""
+    o = run_strategy(KEY, uniform_jobs, strategy, P, theta=1e-3, oracle=True)
+    e = run_strategy(KEY, uniform_jobs, strategy, P, theta=1e-3, oracle=False)
+    np.testing.assert_array_equal(np.asarray(o.result.job_met),
+                                  np.asarray(e.result.job_met))
+
+    blind = SimParams(launch_overhead_frac=0.4)   # startup 4.0 > tau_est 3.0
+    b = run_strategy(KEY, uniform_jobs, strategy, blind, theta=1e-3,
+                     oracle=False)
+    ns = run_strategy(KEY, uniform_jobs, "hadoop_ns", P, theta=1e-3)
+    assert float(b.result.pocd) <= float(o.result.pocd) + 1e-6
+    assert float(b.result.pocd) == pytest.approx(
+        float(ns.result.pocd), abs=0.05)
+
+
+# ---------------------------------------------------------------------------
 # vectorized rank + replication axis
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,231 @@
+"""Unified strategy IR: registry invariants, draw-for-draw bit-identity of
+the six legacy strategies across the refactor (flat + capacity backends),
+and end-to-end runs of the registry-defined additions (hedge, adaptive)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import run_cluster, run_cluster_strategy
+from repro.sim import generate, SimParams, run_all, run_strategy
+from repro.strategies import (StrategySpec, get, index_of, names, register,
+                              solve_jobs)
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+LEGACY = ("hadoop_ns", "hadoop_s", "mantri", "clone", "srestart", "sresume")
+
+# Golden outputs recorded at commit e247e71 (pre-refactor) with
+# generate(n_jobs=120, seed=3), PRNGKey(0), theta=1e-3, max_r=8:
+# (pocd, mean_cost, sum r*, mean job_completion). The refactor must keep
+# every legacy strategy's key consumption order — and therefore its draws —
+# exactly; these are compared with == (bit identity), not approx.
+GOLDEN_FLAT = {
+    "hadoop_ns": (0.0416666679084301, 14076.833984375, 0, 2716.346435546875),
+    "hadoop_s": (0.2666666805744171, 10017.7080078125, 0, 116.68392181396484),
+    "mantri": (0.38333335518836975, 10257.2333984375, 0, 77.25098419189453),
+    "clone": (0.5, 9653.0703125, 120, 94.0360107421875),
+    "srestart": (0.9333333969116211, 8370.3515625, 240, 73.01025390625),
+    "sresume": (0.9500000476837158, 8166.42236328125, 120, 73.01316833496094),
+}
+# Same trace through the finite-capacity engine at slots=300:
+# (pocd, mean_cost, mean_wait, mean job_completion).
+GOLDEN_CLUSTER = {
+    "hadoop_ns": (0.0416666679084301, 14076.833984375, 51.18889617919922,
+                  2727.35302734375),
+    "hadoop_s": (0.25, 10016.837890625, 47.603912353515625,
+                 133.60797119140625),
+    "mantri": (0.3083333373069763, 10145.181640625, 43.87923049926758,
+               95.71238708496094),
+    "clone": (0.44166669249534607, 9653.0703125, 44.252357482910156,
+              111.27254486083984),
+    "srestart": (0.6583333611488342, 8370.3515625, 40.80974578857422,
+                 89.15113830566406),
+    "sresume": (0.6666666865348816, 8166.42236328125, 39.75829315185547,
+                89.03546905517578),
+}
+
+
+@pytest.fixture(scope="module")
+def golden_jobs():
+    return generate(n_jobs=120, seed=3)
+
+
+@pytest.mark.parametrize("strategy", LEGACY)
+def test_flat_bit_identity(golden_jobs, strategy):
+    o = run_strategy(KEY, golden_jobs, strategy, P, theta=1e-3, max_r=8)
+    got = (float(o.result.pocd), float(o.result.mean_cost),
+           int(np.asarray(o.r_opt).sum()),
+           float(np.asarray(o.result.job_completion).mean()))
+    assert got == GOLDEN_FLAT[strategy], (strategy, got)
+
+
+@pytest.mark.parametrize("strategy", LEGACY)
+def test_cluster_bit_identity(golden_jobs, strategy):
+    o = run_cluster_strategy(KEY, golden_jobs, strategy, P, slots=300,
+                             theta=1e-3, max_r=8)
+    got = (float(o.result.pocd), float(o.result.mean_cost),
+           float(o.queue.mean_wait),
+           float(np.asarray(o.result.job_completion).mean()))
+    assert got == GOLDEN_CLUSTER[strategy], (strategy, got)
+
+
+# ---------------------------------------------------------------------------
+# registry invariants
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_order_and_kinds():
+    """The historical six come first (stable PRNG key indices); the IR
+    additions append. Kind filters partition the registry."""
+    assert names()[:6] == LEGACY
+    assert set(names()) == set(LEGACY) | {"hedge", "adaptive"}
+    assert names(kind="chronos") == ("clone", "srestart", "sresume")
+    assert set(names(kind="baseline")) == {"hadoop_ns", "hadoop_s", "mantri",
+                                           "hedge"}
+    assert names(kind="meta") == ("adaptive",)
+    assert names(kind="optimized") == ("clone", "srestart", "sresume",
+                                       "adaptive")
+    for i, n in enumerate(names()):
+        assert index_of(n) == i
+
+
+def test_registry_get_unknown_and_duplicate():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get("definitely-not-registered")
+    with pytest.raises(ValueError, match="already registered"):
+        register(get("clone"))
+    with pytest.raises(ValueError, match="unknown kind"):
+        names(kind="nope")
+
+
+def test_spec_contract():
+    """Optimized specs carry analytic forms; tile-armed specs are exactly
+    the kernel MODES; race flags match the paper's semantics."""
+    from repro.kernels import ops
+    for n in names(kind="optimized"):
+        s = get(n)
+        assert s.log_task_fail is not None and s.cost is not None, n
+    assert tuple(n for n in names() if get(n).tile_outcome is not None) \
+        == ops.MODES == ("clone", "srestart", "sresume")
+    assert {n: get(n).race for n in names()} == {
+        "hadoop_ns": False, "hadoop_s": True, "mantri": True, "hedge": True,
+        "clone": False, "srestart": False, "sresume": False,
+        "adaptive": False}
+    with pytest.raises(ValueError, match="closed-forms"):
+        register(StrategySpec(name="broken", kind="chronos", race=False,
+                              detectable=False, draw=lambda *a, **k: None,
+                              build_table=lambda *a, **k: None))
+
+
+# ---------------------------------------------------------------------------
+# hedge + adaptive end-to-end through every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trace_jobs():
+    return generate(n_jobs=150, seed=3)
+
+
+@pytest.mark.parametrize("strategy", ["hedge", "adaptive"])
+def test_new_strategy_flat_matches_infinite_capacity(trace_jobs, strategy):
+    """The spec's build_table consumes the same draws as its flat draw, so
+    slots=None replay reproduces the flat simulator (same guarantee the
+    built-ins have)."""
+    flat = run_strategy(KEY, trace_jobs, strategy, P, theta=1e-3, max_r=8)
+    clus = run_cluster_strategy(KEY, trace_jobs, strategy, P, slots=None,
+                                theta=1e-3, max_r=8)
+    assert float(clus.result.pocd) == pytest.approx(
+        float(flat.result.pocd), abs=1e-6)
+    assert float(clus.result.mean_cost) == pytest.approx(
+        float(flat.result.mean_cost), rel=1e-5)
+    assert float(clus.queue.mean_wait) == 0.0
+
+
+@pytest.mark.parametrize("strategy", ["hedge", "adaptive"])
+def test_new_strategy_finite_slots(trace_jobs, strategy):
+    o = run_cluster_strategy(KEY, trace_jobs, strategy, P, slots=200,
+                             theta=1e-3, max_r=8)
+    assert 0.0 <= float(o.result.pocd) <= 1.0
+    assert 0.0 <= float(o.queue.utilization) <= 1.0 + 1e-6
+    assert float(o.queue.mean_wait) >= 0.0
+
+
+def test_run_all_and_run_cluster_default_to_registry(trace_jobs):
+    outs_f, _ = run_all(KEY, trace_jobs, P, theta=1e-3)
+    outs_c, _ = run_cluster(KEY, trace_jobs, P, slots=None, theta=1e-3)
+    assert set(outs_f) == set(names()) == set(outs_c)
+    # per-name fold_in keys: flat and cluster mirrors stay in lockstep
+    for s in names():
+        assert float(outs_c[s].result.pocd) == pytest.approx(
+            float(outs_f[s].result.pocd), abs=1e-6), s
+
+
+def test_key_assignment_is_order_independent(trace_jobs):
+    """Keys are derived from the registry index of each *name*, so
+    subsetting or reordering `strategies` cannot change another
+    strategy's draws."""
+    full, _ = run_all(KEY, trace_jobs, P, theta=1e-3)
+    subset, _ = run_all(KEY, trace_jobs, P, theta=1e-3,
+                        strategies=("sresume", "hadoop_ns"))
+    assert float(subset["sresume"].result.pocd) == \
+        float(full["sresume"].result.pocd)
+    np.testing.assert_array_equal(
+        np.asarray(subset["sresume"].result.job_completion),
+        np.asarray(full["sresume"].result.job_completion))
+
+
+def test_hedge_only_ever_helps_completion(trace_jobs):
+    """Hedging adds one duplicate and kills nothing: with the same primary
+    draws, per-task completion can only improve, so job PoCD >= the same
+    trace's no-speculation PoCD under the same key."""
+    from repro.strategies.hedge import sim_hedge
+    from repro.sim.strategies import _pareto
+    comp_h, mach_h = sim_hedge(KEY, trace_jobs, P)
+    k1, _ = jax.random.split(KEY)
+    T1 = _pareto(k1, trace_jobs.task_t_min, trace_jobs.task_beta,
+                 (trace_jobs.total_tasks,))
+    assert bool(jnp.all(comp_h <= T1 + 1e-5))
+    assert bool(jnp.all(mach_h >= comp_h - 1e-5))
+
+
+def test_adaptive_dominates_pure_strategies_paper_hadoop():
+    """Acceptance: on the paper-hadoop scenario, adaptive's net utility is
+    >= each pure Chronos strategy's (same key => shared primary draw
+    structure; the per-job argmax can only help)."""
+    from repro.workloads import make_jobset
+    jobs = make_jobset("paper-hadoop", n_jobs=250, seed=0)
+    ns = run_strategy(KEY, jobs, "hadoop_ns", P, theta=1e-4)
+    r_min = float(ns.result.pocd) - 1e-3
+    util = {}
+    for s in ("clone", "srestart", "sresume", "adaptive"):
+        o = run_strategy(KEY, jobs, s, P, theta=1e-4, r_min=r_min, max_r=8)
+        util[s] = float(o.utility)
+    assert util["adaptive"] >= max(util["clone"], util["srestart"],
+                                   util["sresume"]) - 1e-6, util
+
+
+def test_adaptive_choice_matches_per_job_argmax():
+    """solve_jobs returns the per-job sub-strategy pick; the composite
+    closed-form utility equals max over the pure strategies' utilities."""
+    from repro.sim.runner import jobspecs_of
+    jobs = generate(n_jobs=60, seed=5)
+    specs = jobspecs_of(jobs, P, 1e-4, 0.0)
+    subs = ("clone", "srestart", "sresume")
+    r_a, ch, u_a, _, _ = solve_jobs("adaptive", specs, 9)
+    pure = jnp.stack([solve_jobs(s, specs, 9)[2] for s in subs])
+    np.testing.assert_allclose(np.asarray(u_a),
+                               np.asarray(jnp.max(pure, axis=0)), rtol=1e-6)
+    assert set(np.asarray(ch)) <= {0, 1, 2}
+
+
+def test_new_strategy_on_scenario():
+    """Registry-defined strategies run through workload scenarios."""
+    from repro.workloads import make_jobset
+    jobs = make_jobset("diurnal-burst", n_jobs=80, seed=1)
+    outs, _ = run_all(KEY, jobs, SimParams(), theta=1e-4,
+                      strategies=("hadoop_ns", "hedge", "adaptive"))
+    for s in ("hedge", "adaptive"):
+        assert 0.0 <= float(outs[s].result.pocd) <= 1.0, s
+        assert float(outs[s].result.mean_cost) > 0.0, s

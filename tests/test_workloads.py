@@ -203,8 +203,8 @@ def test_run_all_accepts_scenario(tenant_jobs):
     """run_all takes a registry scenario (by JobSet or by name) with >= 3
     classes and heterogeneous deadlines."""
     outs, r_min = run_all(KEY, tenant_jobs, P, theta=1e-4)
-    assert set(outs) == {"hadoop_ns", "hadoop_s", "mantri",
-                         "clone", "srestart", "sresume"}
+    from repro.strategies import names
+    assert set(outs) == set(names())
     for o in outs.values():
         assert 0.0 <= float(o.result.pocd) <= 1.0
     assert 0.0 <= r_min <= 1.0
