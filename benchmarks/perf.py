@@ -159,6 +159,54 @@ def bench_pocd_kernel_all(J=1024, N=32, R=6, iters=3):
     return dt, 3 * J * N * R / dt      # attempt-samples per second
 
 
+def bench_fleet_sharded(n_jobs=600, reps=4, block_jobs=64, devices=None,
+                        iters=3):
+    """Device-sharded fleet pipeline (solve -> blocks -> shard_map MC ->
+    host reduce) on the ("rep", "job") mesh. `devices=None` uses every
+    visible device (1 on a plain CPU run; the CI multi-device lane and
+    `benchmarks.run --devices N` force more). Derived metric:
+    task-executions/sec across replications."""
+    from repro.fleet import fleet_mesh, run_fleet_strategy
+
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+    mesh = fleet_mesh(devices=devices, reps=reps)
+
+    def run():
+        out = run_fleet_strategy(key, jobs, "sresume", p, mesh=mesh,
+                                 reps=reps, block_jobs=block_jobs)
+        jax.block_until_ready(out.result.job_cost)
+
+    dt = _time(run, iters=iters)
+    return dt, jobs.total_tasks * reps / dt
+
+
+def bench_fleet_chunked(n_jobs=2000, chunk_jobs=512, block_jobs=64,
+                        iters=4):
+    """Chunked trace streamer: per-chunk compiled pipeline + streaming
+    combiner (bounded memory). The chunk loop is host-side (numpy block
+    assembly per chunk), so a mean over iters inherits GC/allocator
+    spikes; best-of-iters is the stable estimator for the gate.
+    Derived metric: jobs streamed/sec."""
+    from repro.fleet import run_fleet_strategy
+
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        out = run_fleet_strategy(key, jobs, "sresume", p, reps=1,
+                                 block_jobs=block_jobs,
+                                 chunk_jobs=chunk_jobs)
+        jax.block_until_ready(out.result.job_cost)
+
+    run()
+    run()    # warmup: per-chunk compiles
+    dt = min(_time(run, warmup=0, iters=1) for _ in range(iters))
+    return dt, n_jobs / dt
+
+
 def bench_workload_synthesize(n_jobs=2700, scenario="diurnal-burst"):
     """Scenario resolution -> trace synthesis -> JobSet lowering (the
     offline workload path every heterogeneous evaluation pays once)."""

@@ -91,6 +91,15 @@ def perf_benches(perf, smoke: bool):
             ("strategy_adaptive",
              lambda: perf.bench_new_strategy("adaptive", n_jobs=100, reps=2,
                                              iters=3)),
+            # fleet layer: sharded runner (all visible devices) + chunked
+            # trace streamer, so the gate guards shard_map dispatch and
+            # the per-chunk recompile-free streaming path
+            ("fleet_sharded",
+             lambda: perf.bench_fleet_sharded(n_jobs=150, reps=2,
+                                              block_jobs=32, iters=2)),
+            ("fleet_chunked",
+             lambda: perf.bench_fleet_chunked(n_jobs=300, chunk_jobs=96,
+                                              block_jobs=32, iters=4)),
         ]
     return [
         ("optimizer_batch_solve", perf.bench_optimizer_throughput),
@@ -105,6 +114,8 @@ def perf_benches(perf, smoke: bool):
          lambda: perf.bench_new_strategy("hedge")),
         ("strategy_adaptive",
          lambda: perf.bench_new_strategy("adaptive")),
+        ("fleet_sharded", perf.bench_fleet_sharded),
+        ("fleet_chunked", perf.bench_fleet_chunked),
     ]
 
 
@@ -213,7 +224,17 @@ def main() -> None:
     ap.add_argument("--retries", type=int, default=2,
                     help="re-measure benches that fail --check up to this "
                          "many times, keeping the best time (default 2)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="> 0 forces N XLA host devices (CPU) so the "
+                         "fleet benches exercise a real multi-device "
+                         "mesh; applied before JAX is imported")
     args = ap.parse_args()
+
+    if args.devices > 0:
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
 
     # snapshot the reference BEFORE any tracker rewrite below, or a full
     # run's --check would compare the fresh numbers against themselves

@@ -18,26 +18,28 @@ per-class SLA weights, with a per-class result breakdown.
 `--strategies` selects a comma-separated subset of
 `repro.strategies.names()` (default: all registered strategies).
 
+With `--devices N` and/or `--chunk-jobs M` execution routes through the
+device-sharded fleet layer (`repro.fleet`): MC replications and job
+blocks shard over a ("rep", "job") mesh and the trace streams in
+bounded-memory chunks. On a CPU-only host, `--devices N` forces N XLA
+host devices (the flag is applied before JAX is imported), so the
+shard_map path is exercisable anywhere — results are bit-identical to
+the fleet single-device path by construction.
+
 Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
       PYTHONPATH=src python examples/simulate_cluster.py --jobs 200 --slots 2000
       PYTHONPATH=src python examples/simulate_cluster.py \
           --scenario diurnal-burst --jobs 50 --slots 500 \
           --strategies hadoop_ns,sresume,hedge,adaptive
+      PYTHONPATH=src python examples/simulate_cluster.py \
+          --jobs 20000 --devices 8 --chunk-jobs 4096 --reps 4
 """
 import argparse
-
-import jax
-import jax.numpy as jnp
-
-from repro.sim import generate, SimParams, run_all
-from repro.sim.metrics import class_summary
-from repro.strategies import names
-from repro.workloads import list_scenarios, make_trace, summarize, to_jobset
+import os
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--jobs", type=int, default=2700)
 ap.add_argument("--scenario", default=None,
-                choices=sorted(list_scenarios()),
                 help="workload-registry scenario (default: the legacy "
                      "single-mix Google-trace generator)")
 ap.add_argument("--seed", type=int, default=0)
@@ -55,7 +57,38 @@ ap.add_argument("--admission-slack", type=float, default=0.0,
 ap.add_argument("--strategies", default=None,
                 help="comma-separated subset of repro.strategies.names() "
                      "(default: all registered strategies)")
+ap.add_argument("--devices", type=int, default=0,
+                help="> 0 routes through the fleet layer on N devices "
+                     "(forcing N XLA host devices on CPU)")
+ap.add_argument("--chunk-jobs", type=int, default=0,
+                help="> 0 streams the trace in chunks of at most M jobs "
+                     "(bounded memory; implies the fleet layer)")
+ap.add_argument("--block-jobs", type=int, default=64,
+                help="fleet job-block granularity (PRNG/sharding unit)")
+ap.add_argument("--reps", type=int, default=1,
+                help="Monte-Carlo replications (fleet: sharded over the "
+                     "mesh's rep axis)")
 args = ap.parse_args()
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if args.devices > 0 and "xla_force_host_platform_device_count" not in _flags:
+    # must happen before jax is imported anywhere in this process; skipped
+    # when the caller (e.g. the multi-device CI lane) already forced it
+    os.environ["XLA_FLAGS"] = (_flags +
+                               " --xla_force_host_platform_device_count="
+                               f"{args.devices}")
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim import generate, SimParams, run_all
+from repro.sim.metrics import class_summary
+from repro.strategies import names
+from repro.workloads import list_scenarios, make_trace, summarize, to_jobset
+
+if args.scenario and args.scenario not in list_scenarios():
+    ap.error(f"unknown scenario {args.scenario!r}; registered: "
+             + ", ".join(sorted(list_scenarios())))
 
 if args.strategies:
     ORDER = tuple(s.strip() for s in args.strategies.split(",") if s.strip())
@@ -66,9 +99,13 @@ if args.strategies:
 else:
     ORDER = names()
 
+use_fleet = args.devices > 0 or args.chunk_jobs > 0
 if args.scenario:
     trace = make_trace(args.scenario, n_jobs=args.jobs, seed=args.seed)
-    jobs = to_jobset(trace)
+    # the fleet layer consumes the columnar trace directly and streams it
+    # chunk-by-chunk — the flat task axis of a million-job trace is never
+    # materialized; the legacy single-device paths need the full JobSet
+    jobs = trace if use_fleet else to_jobset(trace)
     stats = summarize(trace)
     mix = ", ".join(f"{k} {v:.0%}" for k, v in stats["class_mix"].items())
     print(f"scenario {args.scenario}: {jobs.n_jobs} jobs, "
@@ -79,6 +116,12 @@ else:
 print(f"trace: {jobs.n_jobs} jobs, {jobs.total_tasks} tasks, "
       f"beta in [{float(jobs.beta.min()):.2f}, {float(jobs.beta.max()):.2f}]")
 
+devices = args.devices if args.devices > 0 else None
+chunk_jobs = args.chunk_jobs if args.chunk_jobs > 0 else None
+if devices:
+    print(f"fleet: {len(jax.devices())} devices"
+          + (f", chunks of {chunk_jobs} jobs" if chunk_jobs else ""))
+
 if args.slots > 0:
     from repro.cluster import (run_cluster, GovernorConfig, AdmissionConfig)
     governor = GovernorConfig() if args.governor else None
@@ -86,9 +129,10 @@ if args.slots > 0:
                  if args.admission_slack > 0 else None)
     outs, r_min = run_cluster(jax.random.PRNGKey(0), jobs, SimParams(),
                               slots=args.slots, theta=args.theta,
-                              strategies=ORDER,
+                              strategies=ORDER, reps=args.reps,
                               discipline=args.discipline, passes=args.passes,
-                              governor=governor, admission=admission)
+                              governor=governor, admission=admission,
+                              devices=devices, chunk_jobs=chunk_jobs)
     print(f"capacity: {args.slots} slots, {args.discipline} dispatch"
           + (", governor on" if governor else "")
           + (f", admission slack {args.admission_slack}" if admission else ""))
@@ -103,7 +147,9 @@ if args.slots > 0:
               f"{float(o.queue.mean_wait):8.2f}")
 else:
     outs, r_min = run_all(jax.random.PRNGKey(0), jobs, SimParams(),
-                          theta=args.theta, strategies=ORDER)
+                          theta=args.theta, strategies=ORDER,
+                          reps=args.reps, devices=devices,
+                          block_jobs=args.block_jobs, chunk_jobs=chunk_jobs)
     print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} "
           f"{'mean r*':>8s}")
     for name in ORDER:

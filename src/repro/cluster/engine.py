@@ -382,7 +382,7 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
                 passes: int = 2,
                 governor: Optional[GovernorConfig] = None,
                 admission: Optional[AdmissionConfig] = None,
-                reps: int = 1):
+                reps: int = 1, devices=None, mesh=None, chunk_jobs=None):
     """Finite-capacity mirror of `sim.runner.run_all`.
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
@@ -392,7 +392,23 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
     slots=None this reproduces run_all's results draw-for-draw (identical
     per-name keys); with finite slots the same draws queue on the bounded
     pool.
+
+    `devices=N` / `mesh=` / `chunk_jobs=M` route to the fleet layer
+    (`repro.fleet.cluster`): replications shard over every device of the
+    mesh, and chunked traces replay window-by-window on independent slot
+    pools. Without them this single-device path is byte-for-byte the
+    historical one. See DESIGN.md §14.
     """
+    if devices is not None or mesh is not None or chunk_jobs is not None:
+        from ..fleet import fleet_mesh, run_cluster_fleet
+        if mesh is None and devices is not None and int(devices) > 1:
+            mesh = fleet_mesh(devices=devices, reps=reps)
+        return run_cluster_fleet(
+            key, jobs, p, slots=slots, theta=theta, strategies=strategies,
+            r_min_from_ns=r_min_from_ns, max_r=max_r, oracle=oracle,
+            discipline=discipline, passes=passes, governor=governor,
+            admission=admission, reps=reps, mesh=mesh,
+            chunk_jobs=chunk_jobs)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)

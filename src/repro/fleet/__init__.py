@@ -1,0 +1,43 @@
+"""Device-sharded fleet execution of the Chronos evaluation stack.
+
+Chronos's PoCD/cost analysis is embarrassingly parallel across jobs and
+Monte-Carlo replications; this package is the layer that exploits it:
+
+* `mesh` — the ("rep", "job") fleet mesh, default factorization, and the
+  pad+mask arithmetic for counts that do not divide the mesh.
+* `blocks` — the flat ragged JobSet re-laid-out as fixed-shape job
+  blocks, the unit the "job" axis shards (and the PRNG granularity).
+* `runner` — `shard_map`-sharded flat simulation (`run_fleet_strategy` /
+  `run_all_fleet`) with chunked million-job trace streaming through
+  `sim.metrics.StreamCombiner`.
+* `cluster` — replication-sharded finite-capacity replay
+  (`run_cluster_fleet_strategy` / `run_cluster_fleet`) with per-window
+  chunked streaming.
+
+Results are bit-identical across mesh shapes (1x1 / 2x4 / 8x1 / no mesh)
+and chunk sizes by construction: every (replication, job-block) cell is
+keyed by its global coordinates via `fold_in`, and no floating-point
+reduction crosses a shard boundary. `run_all(devices=...)` /
+`run_cluster(devices=...)` route here; without `devices=`/`mesh=` the
+legacy single-device paths are untouched. See DESIGN.md §14.
+"""
+from .blocks import FleetBlocks, block_jobset, gather_index, make_blocks
+from .cluster import run_cluster_fleet, run_cluster_fleet_strategy
+from .mesh import AXES, fleet_mesh, mesh_extents, pad_count
+from .runner import job_columns, run_all_fleet, run_fleet_strategy
+
+__all__ = [
+    "AXES",
+    "FleetBlocks",
+    "block_jobset",
+    "fleet_mesh",
+    "gather_index",
+    "job_columns",
+    "make_blocks",
+    "mesh_extents",
+    "pad_count",
+    "run_all_fleet",
+    "run_cluster_fleet",
+    "run_cluster_fleet_strategy",
+    "run_fleet_strategy",
+]

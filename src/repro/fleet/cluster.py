@@ -1,0 +1,273 @@
+"""Device-sharded finite-capacity execution (the cluster engine's fleet).
+
+Under a shared slot pool every job contends with every other, so the job
+axis cannot shard without changing the queueing semantics — the fleet
+cluster path therefore shards the Monte-Carlo REPLICATION axis over the
+whole mesh (each replication is an independent end-to-end replay), with
+the same global-coordinate key derivation as the flat fleet runner:
+rep i replays with fold_in(strategy_key, i), replications pad+mask to the
+device count, and the replication mean reduces outside the shard_map
+region — so cluster metrics too are bit-identical across mesh shapes.
+
+Chunked streaming (`chunk_jobs=`) replays each job-contiguous window of
+the trace on its own slot pool and combines PoCD/cost/queue metrics with
+`sim.metrics.StreamCombiner`. Traces are arrival-sorted, so windows are
+time-contiguous: cross-window slot contention is ignored (exact in the
+limit of windows much longer than the queue-drain time — see DESIGN.md
+§14). Admission and the r* governor run per window under the same
+approximation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..cluster.admission import (AdmissionConfig, GovernorConfig,
+                                 admit_jobs, apply_governor)
+from ..cluster.engine import (ClusterOutput, QueueMetrics, _narrow_table,
+                              _replay_body)
+from ..cluster.slots import DISCIPLINES, utilization
+from ..sim.metrics import StreamCombiner, aggregate, net_utility
+from ..sim.runner import jobspecs_of, strategy_keys
+from ..sim.trace import jobset_arrays, jobset_of
+from ..strategies import get, names, solve_jobs_jit
+from .mesh import AXES, pad_count
+from .runner import chunk_jobset, job_columns
+
+
+def _cluster_exec(rep_ids, key, arrays, r_j, choice_j, admitted, *,
+                  n_jobs: int, strategy: str, p, slots: Optional[int],
+                  discipline: str, passes: int, max_r: int, oracle: bool,
+                  width: Optional[int]):
+    """Per-replication build -> replay -> metrics; vmapped over local reps.
+
+    shard_map body: rep_ids is the sharded axis, everything else enters
+    replicated. Each rep's key comes from its global index, so the split
+    of reps across devices cannot change any draw.
+    """
+    jobs = jobset_of(n_jobs, arrays)
+    T = jobs.total_tasks
+    spec = get(strategy)
+
+    def build_rep(rid):
+        k = jax.random.fold_in(key, rid)
+        table = spec.build_table(k, jobs, r_j[jobs.job_id],
+                                 choice_j[jobs.job_id], p, max_r=max_r,
+                                 oracle=oracle)
+        if admitted is not None:
+            table = table._replace(
+                active=table.active & admitted[table.job_id])
+        return _narrow_table(table, T, width)
+
+    def replay_rep(table, count_bound):
+        realized, release, start = _replay_body(
+            table, spec.race, jobs.arrival, jobs.D, slots, discipline,
+            passes, T, count_bound=count_bound)
+        completion_rel = realized.task_completion - jobs.arrival[jobs.job_id]
+        res = aggregate(jobs, completion_rel, realized.task_machine)
+        n_active = jnp.maximum(jnp.sum(table.active.astype(jnp.float32)),
+                               1.0)
+        util = (utilization(realized.busy_time, slots, realized.span)
+                if slots is not None else jnp.float32(0.0))
+        return res, (jnp.sum(realized.wait) / n_active,
+                     jnp.max(realized.wait), util, realized.preempted)
+
+    # build all local replications first and hoist ONE shared active-count
+    # bound: a per-rep (batched) bound would collapse the block-skip cond
+    # into both-branch execution under vmap and re-serialize the full
+    # table (the engine's own hoist idiom, cluster/engine.py). Any bound
+    # >= the true count dispatches exactly, so a shard-local max cannot
+    # perturb results across mesh shapes.
+    tables = jax.vmap(build_rep)(rep_ids)
+    count_bound = jnp.max(jnp.sum(tables.active.astype(jnp.int32), axis=1))
+    return jax.vmap(lambda t: replay_rep(t, count_bound))(tables)
+
+
+def _cluster_core_impl(key, rep_ids, arrays, r_j, choice_j, admitted, *,
+                       n_jobs: int, strategy: str, p,
+                       slots: Optional[int], discipline: str, passes: int,
+                       max_r: int, oracle: bool, width: Optional[int],
+                       mesh):
+    """Compiled fan-out only: per-rep (SimResult, queue scalars), padded.
+
+    As in `runner._core_impl`, the replication mean happens host-side in
+    the wrapper — reducing the device-sharded rep axis inside the program
+    would let XLA reassociate float sums per mesh shape.
+    """
+    exec_fn = functools.partial(
+        _cluster_exec, n_jobs=n_jobs, strategy=strategy, p=p, slots=slots,
+        discipline=discipline, passes=passes, max_r=max_r, oracle=oracle,
+        width=width)
+    args = (rep_ids, key, arrays, r_j, choice_j, admitted)
+    if mesh is None or mesh.devices.size == 1:
+        return exec_fn(*args)
+    return shard_map(
+        exec_fn, mesh=mesh,
+        in_specs=(P(AXES), P(), P(), P(), P(), P()),
+        out_specs=P(AXES))(*args)
+
+
+_cluster_fleet_core = jax.jit(_cluster_core_impl, static_argnames=(
+    "n_jobs", "strategy", "p", "slots", "discipline", "passes", "max_r",
+    "oracle", "width", "mesh"))
+
+
+def _rep_mean(tree, reps: int):
+    """Host-side pad+mask epilogue: drop padded reps, mean the rest in a
+    fixed order (bool leaves become float frequencies, as mean_over_reps)."""
+    host = jax.tree.map(lambda x: np.asarray(x)[:reps], tree)
+    if reps == 1:
+        return jax.tree.map(lambda x: x[0], host)
+    return jax.tree.map(
+        lambda x: np.mean(x.astype(np.float32), axis=0), host)
+
+
+def _solve_chunk(cjobs, strategy, p, theta, r_min, max_r, slots,
+                 governor):
+    """(r_j, choice_j, th_p, th_c) for one chunk — mirrors the legacy
+    `run_cluster_strategy` preamble exactly."""
+    J = cjobs.n_jobs
+    if not get(strategy).optimized:
+        zeros = jnp.zeros((J,), jnp.int32)
+        return zeros, zeros, jnp.zeros((J,)), jnp.zeros((J,))
+    specs = jobspecs_of(cjobs, p, jnp.float32(theta), jnp.float32(r_min))
+    if governor is not None and slots is not None:
+        specs = apply_governor(specs, cjobs, slots, governor)
+    r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
+                                                  max_r + 1)
+    return r_j, choice_j, th_p, th_c * specs.C
+
+
+def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
+                               slots: Optional[int] = None, theta=1e-4,
+                               r_min=0.0, max_r: int = 8,
+                               oracle: bool = True,
+                               discipline: str = "fifo", passes: int = 2,
+                               governor: Optional[GovernorConfig] = None,
+                               admission: Optional[AdmissionConfig] = None,
+                               reps: int = 1, width="auto",
+                               chunk_jobs=None,
+                               pad_to: Optional[int] = None
+                               ) -> ClusterOutput:
+    """Fleet mirror of `cluster.engine.run_cluster_strategy`.
+
+    Replications shard over every device of `mesh` (pad+mask to the
+    device count); `chunk_jobs` streams job-contiguous windows through
+    independent slot pools. `pad_to` (int) overrides the replication
+    padding multiple for the pad+mask tests (mesh=None only).
+    """
+    if passes < 2:
+        raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
+                         f"only), got {passes}")
+    if discipline not in DISCIPLINES:
+        raise ValueError(f"unknown discipline {discipline!r}; "
+                         f"expected one of {DISCIPLINES}")
+    if pad_to is not None and mesh is not None:
+        raise ValueError("pad_to is a test-only override; incompatible "
+                         "with an explicit mesh")
+    if not get(strategy).detectable:
+        oracle = True
+    rep_mult = (pad_to if pad_to is not None
+                else (mesh.devices.size if mesh is not None else 1))
+    reps_pad = pad_count(reps, rep_mult)
+    rep_ids = jnp.arange(reps_pad, dtype=jnp.int32)
+
+    cols = job_columns(jobs)
+    J = int(cols[0].shape[0])
+    chunk = J if chunk_jobs is None else max(1, int(chunk_jobs))
+    n_chunks = -(-J // chunk)
+
+    # phase 1 — solve every window first, so width="auto" resolves to ONE
+    # static value (max over windows): per-window widths would recompile
+    # the replay per chunk, and a narrower-than-global width would be
+    # unsound for windows with a larger solved r*. Only the per-job solve
+    # outputs are kept; window JobSets (the task-axis memory) are rebuilt
+    # one at a time in phase 2.
+    bounds, solves = [], []
+    for ci in range(n_chunks):
+        lo, hi = ci * chunk, min((ci + 1) * chunk, J)
+        bounds.append((lo, hi))
+        solves.append(_solve_chunk(chunk_jobset(cols, lo, hi), strategy,
+                                   p, theta, r_min, max_r, slots,
+                                   governor))
+    if width == "auto":
+        width = (int(max(int(jnp.max(s[0])) for s in solves)) + 2
+                 if get(strategy).optimized else None)
+
+    # phase 2 — replay each window on its own slot pool
+    acc = StreamCombiner()
+    r_parts, thp_parts, thc_parts = [], [], []
+    for (lo, hi), (r_j, choice_j, th_p, th_c) in zip(bounds, solves):
+        cjobs = chunk_jobset(cols, lo, hi)
+        admitted = None
+        if admission is not None and slots is not None:
+            admitted = jnp.asarray(admit_jobs(cjobs, slots, admission))
+        res, q = _cluster_fleet_core(
+            key, rep_ids, jobset_arrays(cjobs), r_j, choice_j, admitted,
+            n_jobs=cjobs.n_jobs, strategy=strategy, p=p, slots=slots,
+            discipline=discipline, passes=passes, max_r=max_r,
+            oracle=oracle, width=width, mesh=mesh)
+        res, q = _rep_mean((res, q), reps)
+        mean_wait, max_wait, util, preempted = q
+        admitted_frac = (1.0 if admitted is None
+                         else float(np.mean(np.asarray(admitted))))
+        queue = QueueMetrics(
+            mean_wait=jnp.float32(mean_wait),
+            max_wait=jnp.float32(max_wait),
+            utilization=jnp.float32(util),
+            preempted=jnp.float32(preempted),
+            admitted_frac=jnp.float32(admitted_frac), slots=slots)
+        acc.add(res, n_jobs=cjobs.n_jobs, queue=queue)
+        r_parts.append(np.asarray(r_j))
+        thp_parts.append(np.asarray(th_p))
+        thc_parts.append(np.asarray(th_c))
+
+    result = acc.finalize()
+    queue = acc.finalize_queue()
+    return ClusterOutput(
+        result=result,
+        r_opt=jnp.asarray(np.concatenate(r_parts)),
+        utility=net_utility(result.pocd, result.mean_cost, r_min, theta),
+        theory_pocd=jnp.asarray(np.concatenate(thp_parts)),
+        theory_cost=jnp.asarray(np.concatenate(thc_parts)),
+        queue=queue)
+
+
+def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
+                      theta=1e-4, strategies=None,
+                      r_min_from_ns: bool = True, max_r: int = 8,
+                      oracle: bool = True, discipline: str = "fifo",
+                      passes: int = 2,
+                      governor: Optional[GovernorConfig] = None,
+                      admission: Optional[AdmissionConfig] = None,
+                      reps: int = 1, mesh=None, chunk_jobs=None):
+    """Fleet mirror of `cluster.engine.run_cluster` (same r_min protocol)."""
+    if isinstance(jobs, str):
+        from ..workloads.registry import make_trace
+        jobs = make_trace(jobs)
+    if strategies is None:
+        strategies = names()
+    key_of = strategy_keys(key, strategies)
+    kw = dict(mesh=mesh, slots=slots, theta=theta, max_r=max_r,
+              oracle=oracle, discipline=discipline, passes=passes,
+              governor=governor, admission=admission, reps=reps,
+              chunk_jobs=chunk_jobs)
+    outs = {}
+    r_min = 0.0
+    if "hadoop_ns" in strategies:
+        outs["hadoop_ns"] = run_cluster_fleet_strategy(
+            key_of["hadoop_ns"], jobs, "hadoop_ns", p, r_min=0.0, **kw)
+        if r_min_from_ns:
+            r_min = float(outs["hadoop_ns"].result.pocd) - 1e-3
+    for name in strategies:
+        if name == "hadoop_ns":
+            continue
+        outs[name] = run_cluster_fleet_strategy(key_of[name], jobs, name, p,
+                                                r_min=r_min, **kw)
+    return outs, r_min

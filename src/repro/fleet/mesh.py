@@ -1,0 +1,69 @@
+"""Fleet mesh construction and pad+mask arithmetic.
+
+The fleet layer executes every strategy over a 2-D logical device mesh
+``("rep", "job")``: Monte-Carlo replications shard over "rep", job blocks
+shard over "job". Like `sharding/planner.py`'s logical-axis rules, neither
+axis is required to divide its extent — `pad_count` rounds the replication
+count and the block count up to the mesh extents and the padded tail is
+masked out of every reduction, so any device count works on any trace.
+
+`fleet_mesh` picks the default factorization: the "rep" extent is
+``gcd(n_devices, reps)`` (every rep shard gets the same number of whole
+replications) and the remaining factor goes to "job". Explicit shapes are
+accepted for tests and benchmarks — results are bit-identical across
+shapes by construction (see runner.py's key-derivation contract).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+AXES = ("rep", "job")
+
+
+def fleet_mesh(devices: Optional[int] = None,
+               shape: Optional[Tuple[int, int]] = None,
+               reps: int = 1) -> Mesh:
+    """Build the ("rep", "job") fleet mesh.
+
+    devices: use the first N of jax.devices() (None = all of them).
+    shape:   explicit (rep_extent, job_extent) — overrides the default
+             factorization; rep_extent * job_extent devices are used.
+    reps:    the replication count the default factorization balances for.
+    """
+    devs = jax.devices()
+    if shape is None:
+        n = len(devs) if devices is None else int(devices)
+        if n < 1:
+            raise ValueError(f"devices must be >= 1, got {n}")
+        r_ext = math.gcd(n, max(int(reps), 1))
+        shape = (r_ext, n // r_ext)
+    r_ext, j_ext = int(shape[0]), int(shape[1])
+    if r_ext < 1 or j_ext < 1:
+        raise ValueError(f"mesh shape must be positive, got {shape}")
+    n = r_ext * j_ext
+    if n > len(devs):
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices but only "
+            f"{len(devs)} are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} on CPU)")
+    return Mesh(np.asarray(devs[:n]).reshape(r_ext, j_ext), AXES)
+
+
+def mesh_extents(mesh: Optional[Mesh]) -> Tuple[int, int]:
+    """(rep_extent, job_extent) of a fleet mesh; (1, 1) when mesh is None."""
+    if mesh is None:
+        return (1, 1)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return (sizes.get("rep", 1), sizes.get("job", 1))
+
+
+def pad_count(n: int, extent: int) -> int:
+    """Round n up to a multiple of the mesh extent (pad+mask fallback)."""
+    if extent < 1:
+        raise ValueError(f"extent must be >= 1, got {extent}")
+    return -(-n // extent) * extent

@@ -1,0 +1,296 @@
+"""Device-sharded fleet execution of the flat trace simulator.
+
+Runs every StrategySpec's Monte-Carlo backend across an arbitrary
+("rep", "job") device mesh (`shard_map`): replications shard over "rep",
+job blocks (`blocks.py`) over "job", with pad+mask fallbacks for counts
+that do not divide the mesh (the `sharding/planner.py` idiom applied to
+the simulation axes).
+
+Key-derivation contract — the invariance the whole layer rests on: the
+draw key of (replication i, job block g) is
+
+    fold_in(fold_in(strategy_key, i), g)          # g is the GLOBAL index
+
+so a (rep, block) cell's draws depend only on the caller's key and the
+cell's global coordinates — never on the mesh shape, the pad amounts, or
+the chunk split. Metrics are therefore bit-identical across 1x1 / 2x4 /
+8x1 meshes, the no-mesh single-device path, and any chunk size (chunk
+boundaries are forced onto block boundaries), which is what lets a CI
+host with 8 forced CPU devices certify the path production meshes take.
+
+Every cross-job reduction happens OUTSIDE the shard_map region, on the
+gathered per-job columns, in trace order — shards never psum floats, so
+mesh topology cannot perturb a reduction order.
+
+The fleet path draws per (rep, block) rather than per whole-trace key, so
+its Monte-Carlo stream is statistically equivalent but not draw-identical
+to the legacy single-device `sim.runner` path, which stays byte-for-byte
+unchanged (and is still what `run_all` uses when no devices are asked
+for). Chunked streaming (`chunk_jobs=`) bounds memory at
+O(chunk draws) and reduces through `sim.metrics.StreamCombiner`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..sim.metrics import SimResult, StreamCombiner, net_utility
+from ..sim.runner import RunOutput, jobspecs_of, strategy_keys
+from ..sim.trace import build_jobset
+from ..strategies import get, names, solve_jobs_jit
+from .blocks import (block_jobset, block_layout, block_task_counts,
+                     gather_index, make_blocks, stack_task_column)
+from .mesh import mesh_extents, pad_count
+
+_JOB_COLUMNS = ("n_tasks", "t_min", "beta", "D", "arrival", "C",
+                "job_class", "theta_scale")
+
+
+def job_columns(source) -> tuple:
+    """Per-job numpy columns of a JobSet or WorkloadTrace (same schema).
+
+    The chunked streamer slices these — never the flat per-task arrays —
+    so a million-job WorkloadTrace is chunked without ever materializing
+    its full task axis.
+    """
+    return tuple(np.asarray(getattr(source, f)) for f in _JOB_COLUMNS)
+
+
+def chunk_jobset(cols: tuple, lo: int, hi: int):
+    """Build the JobSet for jobs [lo, hi) of sliced per-job columns."""
+    sl = tuple(c[lo:hi] for c in cols)
+    return build_jobset(*sl[:6], job_class=sl[6], theta_scale=sl[7])
+
+
+# ---------------------------------------------------------------------------
+# Compiled core: per-(rep, block) draws -> per-job metrics
+# ---------------------------------------------------------------------------
+
+
+def _exec_blocks(key, rep_ids, blocks, r_blocks, choice_blocks, *,
+                 strategy: str, p, max_r: int, oracle: bool):
+    """(reps, G, Jb) per-job completion/machine for every (rep, block).
+
+    This is the shard_map body: everything here is local to one mesh cell
+    slice, and each (rep, block) is keyed by its global coordinates, so
+    the values cannot depend on how the axes were partitioned.
+    """
+    spec = get(strategy)
+
+    def one_rep(rid):
+        k_rep = jax.random.fold_in(key, rid)
+
+        def one_block(blk, r_task, choice_task):
+            bjs = block_jobset(blk)
+            k = jax.random.fold_in(k_rep, blk.block_id)
+            completion, machine = spec.draw(
+                k, bjs, r_task, choice_task, p, max_r=max_r, oracle=oracle)
+            jc = jax.ops.segment_max(completion, bjs.job_id, bjs.n_jobs)
+            jm = jax.ops.segment_sum(
+                jnp.where(blk.task_valid, machine, 0.0), bjs.job_id,
+                bjs.n_jobs)
+            return jc, jm
+
+        return jax.vmap(one_block)(blocks, r_blocks, choice_blocks)
+
+    return jax.vmap(one_rep)(rep_ids)
+
+
+def _core_impl(key, rep_ids, blocks, r_blocks, choice_blocks, *,
+               strategy: str, p, max_r: int, oracle: bool, mesh):
+    """Compiled fan-out only: (reps_pad, G_pad, Jb) completion/machine.
+
+    Deliberately returns the RAW per-(rep, block) results: every value is
+    a pure function of its cell's global coordinates, so the outputs are
+    bitwise mesh-invariant. All cross-rep / cross-job reductions happen
+    host-side in `_chunk_result` — reducing a device-sharded axis inside
+    the compiled program would let XLA reassociate float sums differently
+    per mesh shape, which is exactly the nondeterminism this layer bans.
+    """
+    exec_fn = functools.partial(_exec_blocks, strategy=strategy, p=p,
+                                max_r=max_r, oracle=oracle)
+    if mesh is None or mesh.devices.size == 1:
+        # single-device fast path: same computation, no partitioning
+        return exec_fn(key, rep_ids, blocks, r_blocks, choice_blocks)
+    blocks_spec = jax.tree.map(lambda _: P("job"), blocks)
+    return shard_map(
+        exec_fn, mesh=mesh,
+        in_specs=(P(), P("rep"), blocks_spec, P("job"), P("job")),
+        out_specs=(P("rep", "job"), P("rep", "job")))(
+            key, rep_ids, blocks, r_blocks, choice_blocks)
+
+
+_STATIC = ("strategy", "p", "max_r", "oracle", "mesh")
+if jax.default_backend() == "cpu":
+    # XLA:CPU does not implement buffer donation — donating would only
+    # log warnings per chunk, so the CPU entry skips it
+    _fleet_core = jax.jit(_core_impl, static_argnames=_STATIC)
+else:
+    _fleet_core = jax.jit(_core_impl, static_argnames=_STATIC,
+                          donate_argnums=(2, 3, 4))
+
+
+def _chunk_result(jc, jm, D, C, reps: int, n_jobs: int,
+                  block_jobs: int) -> SimResult:
+    """Pad+mask epilogue + metric reductions, host-side and numpy-exact.
+
+    Drops padded reps, gathers real jobs back into trace order, and
+    reduces replications/jobs in one fixed order regardless of how (or
+    whether) the compiled fan-out was device-sharded. Elementwise steps
+    (compare, multiply) are IEEE-exact, so they match what the compiled
+    epilogue produced historically; the reductions are the part that must
+    live here.
+    """
+    jc = np.asarray(jc)
+    jm = np.asarray(jm)
+    gather = gather_index(n_jobs, block_jobs)
+    jc = jc[:reps].reshape(reps, -1)[:, gather]
+    jm = jm[:reps].reshape(reps, -1)[:, gather]
+    met = jc <= np.asarray(D)[None, :]
+    cost = jm * np.asarray(C)[None, :]
+    if reps == 1:
+        met_j, comp_j, cost_j = met[0], jc[0], cost[0]
+    else:
+        met_j = met.mean(axis=0, dtype=np.float32)
+        comp_j = jc.mean(axis=0, dtype=np.float32)
+        cost_j = cost.mean(axis=0, dtype=np.float32)
+    return SimResult(
+        pocd=jnp.float32(met_j.mean(dtype=np.float32)),
+        job_met=jnp.asarray(met_j), job_completion=jnp.asarray(comp_j),
+        job_cost=jnp.asarray(cost_j),
+        mean_cost=jnp.float32(cost_j.mean(dtype=np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Per-strategy entry: solve -> blocks -> sharded MC -> streaming reduce
+# ---------------------------------------------------------------------------
+
+
+def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
+                       theta=1e-4, r_min=0.0, max_r: int = 8,
+                       oracle: bool = True, reps: int = 1,
+                       block_jobs: int = 64, chunk_jobs=None,
+                       pad_to=None) -> RunOutput:
+    """Fleet mirror of `sim.runner.run_strategy`.
+
+    jobs: a JobSet or a WorkloadTrace (traces are chunked column-wise, so
+        the full task axis is never materialized).
+    mesh: a ("rep", "job") mesh from `fleet_mesh` (None = this process's
+        single-device path — bit-identical to every mesh shape).
+    chunk_jobs: stream the trace in job-contiguous chunks of at most this
+        many jobs (rounded down to a block multiple; a chunk_jobs smaller
+        than block_jobs shrinks the blocks — the memory bound wins, at
+        the price of a different block decomposition and hence different
+        draws than an unchunked run). None = one chunk.
+    pad_to: (rep_mult, job_mult) padding override for the pad+mask
+        property tests; only valid without a mesh.
+    block_jobs: jobs per shardable block (the key-derivation granularity —
+        changing it changes the draws, so keep it fixed when comparing).
+    """
+    spec = get(strategy)
+    if not spec.detectable:
+        oracle = True
+    if pad_to is not None and mesh is not None:
+        raise ValueError("pad_to is a test-only override; incompatible "
+                         "with an explicit mesh")
+    cols = job_columns(jobs)
+    J = int(cols[0].shape[0])
+    B = max(1, min(int(block_jobs), J))
+    if chunk_jobs is not None:
+        # the chunk is the memory bound the caller asked for: blocks
+        # shrink to honor it (chunk boundaries must land on block
+        # boundaries or the global block indices — and hence the draws —
+        # would shift between chunked and monolithic runs)
+        B = min(B, max(1, int(chunk_jobs)))
+    rep_ext, job_ext = pad_to if pad_to is not None else mesh_extents(mesh)
+
+    reps_pad = pad_count(reps, rep_ext)
+    rep_ids = jnp.arange(reps_pad, dtype=jnp.int32)
+
+    chunk = J if chunk_jobs is None else max(B, (int(chunk_jobs) // B) * B)
+    n_chunks = -(-J // chunk)
+    blocks_per_chunk = -(-chunk // B)
+    min_blocks = pad_count(blocks_per_chunk, job_ext)
+    # one global task width -> every chunk reuses one compiled program
+    Tb = int(block_task_counts(cols[0], B).max())
+
+    theta_f = jnp.float32(theta)
+    r_min_f = jnp.float32(r_min)
+    acc = StreamCombiner()
+    r_parts, thp_parts, thc_parts = [], [], []
+    for ci in range(n_chunks):
+        lo, hi = ci * chunk, min((ci + 1) * chunk, J)
+        cjobs = chunk_jobset(cols, lo, hi)
+        Jc = cjobs.n_jobs
+        if not spec.optimized:
+            r_j = jnp.zeros((Jc,), jnp.int32)
+            choice_j = jnp.zeros((Jc,), jnp.int32)
+            th_p = jnp.zeros((Jc,))
+            th_c = jnp.zeros((Jc,))
+        else:
+            specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
+            r_j, choice_j, _, th_p, th_c = solve_jobs_jit(
+                strategy, specs, max_r + 1)
+            th_c = th_c * specs.C
+        layout = block_layout(cjobs, B, pad_blocks_to=job_ext,
+                              tasks_pad=Tb, min_blocks=min_blocks)
+        blocks = make_blocks(cjobs, B,
+                             block_offset=ci * blocks_per_chunk,
+                             layout=layout)
+        jid = np.asarray(cjobs.job_id)
+        r_b = stack_task_column(layout, np.asarray(r_j)[jid], 0, np.int32)
+        c_b = stack_task_column(layout, np.asarray(choice_j)[jid], 0,
+                                np.int32)
+        jc, jm = _fleet_core(key, rep_ids, blocks, r_b, c_b,
+                             strategy=strategy, p=p, max_r=max_r,
+                             oracle=oracle, mesh=mesh)
+        res = _chunk_result(jc, jm, cjobs.D, cjobs.C, reps, Jc, B)
+        acc.add(res, n_jobs=Jc)
+        r_parts.append(np.asarray(r_j))
+        thp_parts.append(np.asarray(th_p))
+        thc_parts.append(np.asarray(th_c))
+
+    result = acc.finalize()
+    return RunOutput(
+        result=result,
+        r_opt=jnp.asarray(np.concatenate(r_parts)),
+        utility=net_utility(result.pocd, result.mean_cost, r_min, theta),
+        theory_pocd=jnp.asarray(np.concatenate(thp_parts)),
+        theory_cost=jnp.asarray(np.concatenate(thc_parts)))
+
+
+def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
+                  r_min_from_ns: bool = True, max_r: int = 8,
+                  reps: int = 1, mesh=None, block_jobs: int = 64,
+                  chunk_jobs=None, pad_to=None):
+    """Fleet mirror of `sim.runner.run_all` (same r_min-from-NS protocol).
+
+    `jobs` may be a JobSet, a WorkloadTrace, or a workload-registry
+    scenario name (resolved to its trace, which streams when chunked).
+    """
+    if isinstance(jobs, str):
+        from ..workloads.registry import make_trace
+        jobs = make_trace(jobs)
+    if strategies is None:
+        strategies = names()
+    key_of = strategy_keys(key, strategies)
+    kw = dict(mesh=mesh, theta=theta, max_r=max_r, reps=reps,
+              block_jobs=block_jobs, chunk_jobs=chunk_jobs, pad_to=pad_to)
+    outs = {}
+    r_min = 0.0
+    if "hadoop_ns" in strategies:
+        outs["hadoop_ns"] = run_fleet_strategy(
+            key_of["hadoop_ns"], jobs, "hadoop_ns", p, r_min=0.0, **kw)
+        if r_min_from_ns:
+            r_min = float(outs["hadoop_ns"].result.pocd) - 1e-3
+    for name in strategies:
+        if name == "hadoop_ns":
+            continue
+        outs[name] = run_fleet_strategy(key_of[name], jobs, name, p,
+                                        r_min=r_min, **kw)
+    return outs, r_min

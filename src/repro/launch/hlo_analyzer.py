@@ -152,6 +152,12 @@ class HloAnalysis:
                 # element-count comparison: fusions may convert dtypes
                 if res_elems is None or elems(op.shape_txt) == res_elems:
                     return True
+            if op.kind in ("fusion", "call"):
+                # the DUS may sit one wrapper deeper (e.g. an entry `call`
+                # to a parallel fusion whose subcomputation updates)
+                cm = _CALLS_RE.search(op.line)
+                if cm and self._root_is_dus(cm.group(1), result_shape):
+                    return True
         return False
 
     # ---- trip counts ----
@@ -180,16 +186,18 @@ class HloAnalysis:
         return self.trip_counts[cond_name]
 
     # ---- op costing ----
-    def _operand_bytes(self, line: str) -> float:
+    def _operand_refs(self, line: str) -> list:
+        """%-operand names of an op line, robust to the two HLO operand
+        dialects ("%x, %y" vs "f32[...]{1,0} %x, ..."). A plain comma
+        split breaks inside layout braces, so scan for %-tokens."""
         m = _OPERANDS_RE.search(line.split("=", 1)[1])
         if not m:
-            return 0.0
-        total = 0.0
-        for token in m.group(1).split(","):
-            token = token.strip()
-            if token.startswith("%") and token in self.sym:
-                total += _shape_elems_bytes(self.sym[token])
-        return total
+            return []
+        return re.findall(r"%[\w.\-]+", m.group(1))
+
+    def _operand_bytes(self, line: str) -> float:
+        return sum(_shape_elems_bytes(self.sym[t])
+                   for t in self._operand_refs(line) if t in self.sym)
 
     def _dot_flops(self, op: OpInfo) -> float:
         _, out_dims = _shape_dims(op.shape_txt)
@@ -199,12 +207,8 @@ class HloAnalysis:
         cm = _CONTRACT_RE.search(op.line)
         k = 1
         if cm:
-            lhs_name = None
-            m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
-            if m:
-                toks = [t.strip() for t in m.group(1).split(",")]
-                if toks and toks[0].startswith("%"):
-                    lhs_name = toks[0]
+            refs = self._operand_refs(op.line)
+            lhs_name = refs[0] if refs else None
             if lhs_name and lhs_name in self.sym:
                 _, lhs_dims = _shape_dims(self.sym[lhs_name])
                 for idx in cm.group(1).split(","):
@@ -277,12 +281,9 @@ class HloAnalysis:
                 if top:
                     ob = self._operand_bytes(op.line)
                     base = 0.0
-                    m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
-                    if m:
-                        toks = [t.strip() for t in m.group(1).split(",")]
-                        if toks and toks[0].startswith("%") and \
-                                toks[0] in self.sym:
-                            base = _shape_elems_bytes(self.sym[toks[0]])
+                    refs = self._operand_refs(op.line)
+                    if refs and refs[0] in self.sym:
+                        base = _shape_elems_bytes(self.sym[refs[0]])
                     self.hbm_bytes += mult * max(ob - base, 0.0) * 2
                 continue
             if kind in ("fusion", "call", "conditional", "map",

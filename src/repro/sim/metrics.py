@@ -56,3 +56,74 @@ def net_utility(pocd, mean_cost, r_min, theta):
     gap = jnp.maximum(pocd - r_min, 1e-9)
     return jnp.where(pocd > r_min, jnp.log10(gap) - theta * mean_cost,
                      -jnp.inf)
+
+
+class StreamCombiner:
+    """Streaming reducer over job-contiguous chunks of a trace.
+
+    The fleet layer (`repro.fleet`) splits million-job traces into
+    bounded-memory chunks and runs the compiled per-strategy pipeline per
+    chunk; this combiner accumulates each chunk's per-job metric columns
+    on the host (a few bytes per job — the memory that chunking bounds is
+    the per-task draw buffers, not these) and `finalize` recomputes the
+    scalar reductions over the full concatenated columns in one device
+    call. Because the scalars are reduced once over the same (J,) arrays
+    a monolithic run would produce, a chunked run is bit-identical to an
+    unchunked one — the equality the chunk tests pin.
+
+    Queue metrics (finite-capacity chunks) combine as weighted means
+    (weights = chunk job counts; `max_wait` takes the max, `preempted`
+    the sum). Each chunk replays on its own slot pool, so combined queue
+    metrics describe per-window contention — see DESIGN.md §14.
+    """
+
+    def __init__(self):
+        self._met, self._completion, self._cost = [], [], []
+        self._weights, self._queues = [], []
+
+    def add(self, result: SimResult, n_jobs: int, queue=None) -> None:
+        import numpy as np
+        self._met.append(np.asarray(result.job_met))
+        self._completion.append(np.asarray(result.job_completion))
+        self._cost.append(np.asarray(result.job_cost))
+        self._weights.append(float(n_jobs))
+        if queue is not None:
+            # paired with this chunk's weight explicitly, so a caller
+            # mixing queue-less and queue-bearing chunks can never
+            # mis-weight a queue with another chunk's job count
+            self._queues.append((float(n_jobs), queue))
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self._weights)
+
+    def finalize(self) -> SimResult:
+        import numpy as np
+        if not self._met:
+            raise ValueError("StreamCombiner.finalize before any add()")
+        met = jnp.asarray(np.concatenate(self._met))
+        completion = jnp.asarray(np.concatenate(self._completion))
+        cost = jnp.asarray(np.concatenate(self._cost))
+        return SimResult(
+            pocd=jnp.mean(met.astype(jnp.float32)), job_met=met,
+            job_completion=completion, job_cost=cost,
+            mean_cost=jnp.mean(cost))
+
+    def finalize_queue(self):
+        """Weighted-combined queue metrics (None when no chunk had any)."""
+        import numpy as np
+        if not self._queues:
+            return None
+        w = np.asarray([wi for wi, _ in self._queues], np.float64)
+        w = w / w.sum()
+        queues = [q for _, q in self._queues]
+        f = lambda xs: jnp.float32(float(np.sum(w * np.asarray(xs))))
+        q0 = queues[0]
+        return type(q0)(
+            mean_wait=f([float(q.mean_wait) for q in queues]),
+            max_wait=jnp.float32(max(float(q.max_wait) for q in queues)),
+            utilization=f([float(q.utilization) for q in queues]),
+            preempted=jnp.float32(
+                sum(float(q.preempted) for q in queues)),
+            admitted_frac=f([float(q.admitted_frac) for q in queues]),
+            slots=q0.slots)

@@ -148,13 +148,31 @@ def strategy_keys(key, strategies) -> dict:
 
 
 def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
-            r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1):
+            r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1,
+            devices=None, mesh=None, block_jobs: int = 64,
+            chunk_jobs=None):
     """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper).
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
     (resolved with that scenario's default size and seed). `strategies=None`
     runs every registered strategy (`repro.strategies.names()`).
+
+    `devices=N` / `mesh=` / `chunk_jobs=M` route to the device-sharded
+    fleet layer (`repro.fleet`): replications and job blocks shard over a
+    ("rep", "job") mesh and the trace streams in bounded-memory chunks,
+    with metrics bit-identical across mesh shapes and chunk sizes. With
+    none of them set, this single-device path is byte-for-byte the
+    historical one. See DESIGN.md §14.
     """
+    if devices is not None or mesh is not None or chunk_jobs is not None:
+        from ..fleet import fleet_mesh, run_all_fleet
+        if mesh is None and devices is not None and int(devices) > 1:
+            mesh = fleet_mesh(devices=devices, reps=reps)
+        return run_all_fleet(key, jobs, p, theta=theta,
+                             strategies=strategies,
+                             r_min_from_ns=r_min_from_ns, max_r=max_r,
+                             reps=reps, mesh=mesh, block_jobs=block_jobs,
+                             chunk_jobs=chunk_jobs)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)

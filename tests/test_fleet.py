@@ -1,0 +1,248 @@
+"""Fleet layer: sharding correctness, pad+mask, chunked streaming.
+
+The bit-identity tests pin the layer's core contract (DESIGN.md §14):
+metrics are invariant to the mesh shape, the pad+mask fallback, and the
+chunk split, because every (rep, job-block) cell is keyed by its global
+coordinates and no float reduction crosses a shard boundary.
+
+Single-device runs exercise the no-mesh path, the 1x1 mesh, the pad+mask
+override, and chunked-vs-monolithic equality; the mesh-shape cases run
+under the CI `multi-device` lane, which forces 8 host devices via
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (they skip on a
+1-device host — the flag must be set before the process starts).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.fleet import (fleet_mesh, make_blocks, mesh_extents, pad_count,
+                         run_all_fleet, run_cluster_fleet_strategy,
+                         run_fleet_strategy)
+from repro.sim import SimParams, generate, run_all
+from repro.strategies import names
+from repro.workloads import JobClass, make_jobset, synthesize
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+
+
+def result_equal(a, b) -> bool:
+    """Bitwise equality of two RunOutput/ClusterOutput result payloads."""
+    if float(a.result.pocd) != float(b.result.pocd):
+        return False
+    if float(a.result.mean_cost) != float(b.result.mean_cost):
+        return False
+    for fld in ("job_met", "job_completion", "job_cost"):
+        if not np.array_equal(np.asarray(getattr(a.result, fld)),
+                              np.asarray(getattr(b.result, fld))):
+            return False
+    return np.array_equal(np.asarray(a.r_opt), np.asarray(b.r_opt))
+
+
+# ---------------------------------------------------------------------------
+# pad+mask (single device: padding forced through the test-only override)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_jobs,block_jobs", [(5, 4), (23, 7), (17, 32)])
+@pytest.mark.parametrize("pad_to", [(3, 2), (2, 5)])
+def test_pad_mask_invariance(n_jobs, block_jobs, pad_to):
+    """Job/rep counts that do not divide the (forced) shard extents give
+    the same metrics as the unpadded run: the padded tail is fully
+    masked."""
+    jobs = generate(n_jobs=n_jobs, seed=3)
+    ref = run_fleet_strategy(KEY, jobs, "sresume", P, reps=3,
+                             block_jobs=block_jobs)
+    out = run_fleet_strategy(KEY, jobs, "sresume", P, reps=3,
+                             block_jobs=block_jobs, pad_to=pad_to)
+    assert result_equal(ref, out)
+
+
+def test_pad_mask_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(n_jobs=st.integers(2, 40), block_jobs=st.integers(1, 16),
+           rep_mult=st.integers(1, 4), job_mult=st.integers(1, 5))
+    def prop(n_jobs, block_jobs, rep_mult, job_mult):
+        jobs = generate(n_jobs=n_jobs, seed=1)
+        ref = run_fleet_strategy(KEY, jobs, "clone", P, reps=2,
+                                 block_jobs=block_jobs)
+        out = run_fleet_strategy(KEY, jobs, "clone", P, reps=2,
+                                 block_jobs=block_jobs,
+                                 pad_to=(rep_mult, job_mult))
+        assert result_equal(ref, out)
+
+    prop()
+
+
+def test_pad_count():
+    assert pad_count(8, 4) == 8
+    assert pad_count(9, 4) == 12
+    assert pad_count(1, 1) == 1
+    with pytest.raises(ValueError):
+        pad_count(3, 0)
+
+
+def test_blocks_shape_contract():
+    jobs = generate(n_jobs=10, seed=0)
+    blk = make_blocks(jobs, block_jobs=4, pad_blocks_to=2, min_blocks=6)
+    assert blk.n_blocks == 6            # ceil(10/4)=3 -> min_blocks
+    assert blk.jobs_per_block == 4
+    # every real task maps to a real job row; padding to the dummy row
+    jid = np.asarray(blk.job_id)
+    valid = np.asarray(blk.task_valid)
+    assert (jid[valid] < 4).all()
+    assert (jid[~valid] == 4).all()
+    assert int(np.asarray(blk.job_valid).sum()) == 10
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_equals_monolithic_paper_hadoop():
+    """Chunk boundaries land on block boundaries, so the draws — and the
+    streamed reductions — are bit-identical to the monolithic run."""
+    jobs = make_jobset("paper-hadoop", n_jobs=120, seed=0)
+    mono = run_fleet_strategy(KEY, jobs, "sresume", P, reps=2,
+                              block_jobs=16)
+    chunked = run_fleet_strategy(KEY, jobs, "sresume", P, reps=2,
+                                 block_jobs=16, chunk_jobs=48)
+    assert result_equal(mono, chunked)
+    assert np.array_equal(np.asarray(mono.theory_pocd),
+                          np.asarray(chunked.theory_pocd))
+
+
+def test_chunked_trace_streams_without_full_jobset():
+    """A 10^5-job synthesized trace streams through bounded chunks: the
+    flat task axis is only ever materialized one chunk at a time."""
+    cls = JobClass(name="tiny", weight=1.0, mean_tasks=5.0,
+                   sigma_tasks=0.4, t_min_range=(8.0, 12.0),
+                   beta_range=(1.3, 1.9), deadline_ratio=2.0)
+    trace = synthesize([cls], n_jobs=100_000, seed=1, hours=10.0)
+    out = run_fleet_strategy(KEY, trace, "sresume", P, reps=1,
+                             block_jobs=64, chunk_jobs=8192)
+    assert out.result.job_met.shape == (100_000,)
+    assert out.r_opt.shape == (100_000,)
+    assert 0.0 <= float(out.result.pocd) <= 1.0
+    assert np.isfinite(float(out.result.mean_cost))
+
+
+def test_cluster_chunked_windows():
+    jobs = generate(n_jobs=60, seed=0)
+    out = run_cluster_fleet_strategy(KEY, jobs, "sresume", P, slots=200,
+                                     reps=2, chunk_jobs=20)
+    assert 0.0 <= float(out.result.pocd) <= 1.0
+    assert float(out.queue.utilization) > 0.0
+    assert out.queue.slots == 200
+    assert out.r_opt.shape == (60,)
+
+
+# ---------------------------------------------------------------------------
+# mesh-shape invariance (multi-device CI lane)
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_mesh_shape_invariance_all_strategies():
+    """Acceptance: on the forced 8-device mesh, sharded metrics are
+    bit-identical to the single-device path for every registered
+    strategy."""
+    jobs = generate(n_jobs=40, seed=0)
+    mesh = fleet_mesh(shape=(2, 4))
+    for name in names():
+        ref = run_fleet_strategy(KEY, jobs, name, P, reps=2, block_jobs=8)
+        out = run_fleet_strategy(KEY, jobs, name, P, reps=2, block_jobs=8,
+                                 mesh=mesh)
+        assert result_equal(ref, out), name
+
+
+@multi_device
+@pytest.mark.parametrize("shape", [(1, 1), (8, 1), (1, 8), (4, 2)])
+def test_mesh_shape_invariance_shapes(shape):
+    """1x1 / 2x4 / 8x1 / ... meshes all produce identical metrics on the
+    same keys (reps=3 does not divide 8: rep padding is exercised)."""
+    jobs = generate(n_jobs=30, seed=0)
+    ref = run_fleet_strategy(KEY, jobs, "sresume", P, reps=3, block_jobs=8,
+                             mesh=fleet_mesh(shape=(2, 4)))
+    out = run_fleet_strategy(KEY, jobs, "sresume", P, reps=3, block_jobs=8,
+                             mesh=fleet_mesh(shape=shape))
+    assert result_equal(ref, out)
+
+
+@multi_device
+def test_run_all_devices_plumbing():
+    """run_all(devices=8) == run_all(devices=1) bit-for-bit (both route
+    to the fleet layer; devices=None keeps the legacy path)."""
+    jobs = generate(n_jobs=30, seed=0)
+    outs8, rmin8 = run_all(KEY, jobs, P, devices=8, reps=2)
+    outs1, rmin1 = run_all(KEY, jobs, P, devices=1, reps=2)
+    assert rmin8 == rmin1
+    assert set(outs8) == set(names())
+    for name in outs8:
+        assert result_equal(outs8[name], outs1[name]), name
+
+
+@multi_device
+def test_cluster_mesh_invariance():
+    jobs = generate(n_jobs=40, seed=0)
+    ref = run_cluster_fleet_strategy(KEY, jobs, "sresume", P, slots=300,
+                                     reps=3)
+    for shape in [(2, 4), (8, 1)]:
+        out = run_cluster_fleet_strategy(KEY, jobs, "sresume", P,
+                                         slots=300, reps=3,
+                                         mesh=fleet_mesh(shape=shape))
+        assert result_equal(ref, out)
+        for fld in ("mean_wait", "max_wait", "utilization", "preempted"):
+            assert float(getattr(ref.queue, fld)) == \
+                float(getattr(out.queue, fld)), fld
+
+
+@multi_device
+def test_fleet_mesh_factorization():
+    assert mesh_extents(fleet_mesh(devices=8, reps=4)) == (4, 2)
+    assert mesh_extents(fleet_mesh(devices=8, reps=1)) == (1, 8)
+    assert mesh_extents(fleet_mesh(devices=8, reps=8)) == (8, 1)
+    assert mesh_extents(fleet_mesh(devices=6, reps=4)) == (2, 3)
+    assert mesh_extents(None) == (1, 1)
+    with pytest.raises(ValueError):
+        fleet_mesh(shape=(64, 64))
+
+
+# ---------------------------------------------------------------------------
+# fleet vs legacy: statistically the same simulation
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_matches_legacy_statistically():
+    """The fleet path draws per (rep, block) instead of per whole trace,
+    so it is draw-different but must estimate the same PoCD/cost. With
+    200 jobs x 4 reps the PoCD standard error is ~0.016 — a 0.1 gate is
+    ~6 sigma."""
+    jobs = generate(n_jobs=200, seed=0)
+    legacy, _ = run_all(KEY, jobs, P, strategies=("hadoop_ns", "sresume"),
+                        reps=4)
+    fleet, _ = run_all_fleet(KEY, jobs, P,
+                             strategies=("hadoop_ns", "sresume"), reps=4)
+    for name in ("hadoop_ns", "sresume"):
+        lp = float(legacy[name].result.pocd)
+        fp = float(fleet[name].result.pocd)
+        assert abs(lp - fp) < 0.1, (name, lp, fp)
+    # r* comes from the same deterministic solve: exactly equal
+    assert np.array_equal(np.asarray(legacy["sresume"].r_opt),
+                          np.asarray(fleet["sresume"].r_opt))
+
+
+def test_scenario_name_resolves():
+    outs, _ = run_all_fleet(KEY, "flash-crowd", P,
+                            strategies=("hadoop_ns", "clone"), reps=1,
+                            chunk_jobs=256)
+    assert set(outs) == {"hadoop_ns", "clone"}
+    assert 0.0 <= float(outs["clone"].result.pocd) <= 1.0
