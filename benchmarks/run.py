@@ -18,6 +18,17 @@ reduced sizes and does not rewrite the tracked JSON; with
 tracked ``us_per_call`` regresses beyond tolerance — the CI
 benchmark-regression gate. ``--out PATH`` writes the fresh results as JSON
 (uploaded as a CI artifact).
+
+``--only a,b`` restricts the perf benches to the named subset — with
+``--smoke --record-smoke`` this re-records just those smoke references
+(the recalibration path for benches whose reference drifted on the CI
+host) without touching any other entry.
+
+``--trace`` runs each perf bench under the span tracer (``repro.obs``)
+and records its per-stage wall-clock breakdown (``stages``) into the
+entry's provenance — so BENCH_perf.json answers not just "how fast" but
+"which stage". Fencing changes dispatch overlap, so ``--trace`` numbers
+are not gate-comparable; it is refused together with ``--check``.
 """
 from __future__ import annotations
 
@@ -163,6 +174,9 @@ def write_perf_tracker(perf_results, record_smoke: bool = False,
         entry["us_per_call"] = r["us_per_call"]
         entry["derived"] = r["derived"]
         entry["commit"] = head
+        if r.get("stages"):
+            # per-stage wall-clock attribution from a --trace run
+            entry["stages"] = r["stages"]
         base = BASELINE.get(r["name"])
         if base is not None:
             entry["baseline"] = {"commit": BASELINE_COMMIT,
@@ -228,7 +242,21 @@ def main() -> None:
                     help="> 0 forces N XLA host devices (CPU) so the "
                          "fleet benches exercise a real multi-device "
                          "mesh; applied before JAX is imported")
+    ap.add_argument("--only", metavar="NAMES", default=None,
+                    help="comma-separated subset of perf benches to run "
+                         "(with --smoke --record-smoke: recalibrate just "
+                         "those smoke references)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run each perf bench under the repro.obs span "
+                         "tracer and record its per-stage breakdown into "
+                         "the entry provenance (incompatible with --check: "
+                         "fencing changes dispatch overlap)")
     args = ap.parse_args()
+
+    if args.trace and args.check:
+        sys.exit("--trace adds block_until_ready fences, so its timings "
+                 "are not comparable to untraced references; run the gate "
+                 "and the traced breakdown as separate invocations")
 
     if args.devices > 0:
         import os
@@ -259,11 +287,29 @@ def main() -> None:
         results.append(_run("fig5_rhist_mode_shift", pf.fig5_r_histogram))
 
     # --- framework perf (us_per_call = one solver/sim/kernel invocation) ---
+    selected = perf_benches(perf, args.smoke)
+    if args.only:
+        only = {s.strip() for s in args.only.split(",") if s.strip()}
+        known = {n for n, _ in selected}
+        unknown = sorted(only - known)
+        if unknown:
+            sys.exit(f"--only names not in this run's bench set: "
+                     f"{', '.join(unknown)} (available: "
+                     f"{', '.join(sorted(known))})")
+        selected = [(n, fn) for n, fn in selected if n in only]
     perf_results = []
-    for name, fn in perf_benches(perf, args.smoke):
+    for name, fn in selected:
+        if args.trace:
+            from repro.obs import trace as obs_trace
+            from repro.obs.export import stage_breakdown
+            obs_trace.enable(fresh=True)
         dt, rate = fn()
-        perf_results.append({"name": name, "us_per_call": dt * 1e6,
-                             "derived": rate, "rows": None})
+        row = {"name": name, "us_per_call": dt * 1e6,
+               "derived": rate, "rows": None}
+        if args.trace:
+            obs_trace.disable()
+            row["stages"] = stage_breakdown()
+        perf_results.append(row)
     results.extend(perf_results)
 
     failures = []

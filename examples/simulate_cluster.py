@@ -26,6 +26,12 @@ host devices (the flag is applied before JAX is imported), so the
 shard_map path is exercisable anywhere — results are bit-identical to
 the fleet single-device path by construction.
 
+With `--trace` the run executes under the span tracer (`repro.obs`) and
+prints a per-stage wall-clock breakdown (synthesis, solve, replay
+dispatch vs device execute); `--trace-out PATH` additionally writes the
+timeline as Chrome-trace JSON, openable in https://ui.perfetto.dev or
+chrome://tracing.
+
 Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
       PYTHONPATH=src python examples/simulate_cluster.py --jobs 200 --slots 2000
       PYTHONPATH=src python examples/simulate_cluster.py \
@@ -33,6 +39,8 @@ Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
           --strategies hadoop_ns,sresume,hedge,adaptive
       PYTHONPATH=src python examples/simulate_cluster.py \
           --jobs 20000 --devices 8 --chunk-jobs 4096 --reps 4
+      PYTHONPATH=src python examples/simulate_cluster.py \
+          --jobs 100 --slots 500 --trace --trace-out trace.json
 """
 import argparse
 import os
@@ -68,6 +76,13 @@ ap.add_argument("--block-jobs", type=int, default=64,
 ap.add_argument("--reps", type=int, default=1,
                 help="Monte-Carlo replications (fleet: sharded over the "
                      "mesh's rep axis)")
+ap.add_argument("--trace", action="store_true",
+                help="enable span tracing (repro.obs): prints a per-stage "
+                     "wall-clock breakdown after the run")
+ap.add_argument("--trace-out", default=None, metavar="PATH",
+                help="write the span timeline as Chrome-trace JSON "
+                     "(open in Perfetto / chrome://tracing; implies "
+                     "--trace)")
 args = ap.parse_args()
 
 _flags = os.environ.get("XLA_FLAGS", "")
@@ -85,6 +100,10 @@ from repro.sim import generate, SimParams, run_all
 from repro.sim.metrics import class_summary
 from repro.strategies import names
 from repro.workloads import list_scenarios, make_trace, summarize, to_jobset
+
+if args.trace or args.trace_out:
+    from repro.obs import trace as obs_trace
+    obs_trace.enable()
 
 if args.scenario and args.scenario not in list_scenarios():
     ap.error(f"unknown scenario {args.scenario!r}; registered: "
@@ -180,3 +199,13 @@ if "mantri" in outs and best_name != "mantri":
     print(f"Best ({best_name}) vs Mantri:    cost "
           f"{(1 - float(best.result.mean_cost) / float(mantri.result.mean_cost)) * 100:.0f}% lower, "
           f"utility +{float(best.utility) - float(mantri.utility):.2f}")
+
+if args.trace or args.trace_out:
+    from repro.obs import export as obs_export
+    tracer = obs_trace.get_tracer()
+    print()
+    print(obs_export.summary(tracer))
+    if args.trace_out:
+        obs_export.write_chrome_trace(args.trace_out, tracer)
+        print(f"chrome trace written to {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")

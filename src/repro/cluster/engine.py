@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import CapacityMetrics, capacity_metrics, reduce_reps
 from ..sim.metrics import SimResult, aggregate, net_utility
 from ..sim.runner import jobspecs_of, mean_over_reps, strategy_keys
 from ..sim.strategies import SimParams
@@ -62,6 +64,10 @@ class ClusterOutput(NamedTuple):
     theory_pocd: jnp.ndarray
     theory_cost: jnp.ndarray
     queue: QueueMetrics
+    # device-side observables (repro.obs.metrics), only populated when the
+    # caller asks for collect_metrics=True — None otherwise, so existing
+    # consumers and the uninstrumented compiled program are untouched
+    metrics: Optional[CapacityMetrics] = None
 
 
 # ---------------------------------------------------------------------------
@@ -257,12 +263,13 @@ def _narrow_table(table: AttemptTable, n_tasks: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "n_jobs", "strategy", "p", "slots", "discipline", "passes", "max_r",
-    "oracle", "reps", "width"))
+    "oracle", "reps", "width", "collect_metrics"))
 def _cluster_core(key, arrays, theta, r_min, r_j, choice_j, th_p, th_c,
                   admitted, *, n_jobs: int, strategy: str, p: SimParams,
                   slots: Optional[int], discipline: str, passes: int,
                   max_r: int, oracle: bool, reps: int,
-                  width: Optional[int]) -> ClusterOutput:
+                  width: Optional[int],
+                  collect_metrics: bool = False) -> ClusterOutput:
     """Single compiled program per strategy: table build, capacity replay,
     and metric reductions, with `reps` MC replications vmapped over split
     keys. r* (and any composite-strategy choice) enters as data — solved
@@ -304,11 +311,19 @@ def _cluster_core(key, arrays, theta, r_min, r_j, choice_j, th_p, th_c,
             max_wait=jnp.max(realized.wait),
             utilization=util, preempted=realized.preempted,
             admitted_frac=admitted_frac, slots=None)
+        if collect_metrics:
+            # functional accumulator pytree, computed from the replay's own
+            # arrays inside this same program (no io_callback, no host
+            # round-trip); the flag is static, so with it off these ops
+            # never enter the jaxpr and the program is byte-identical
+            return res, queue, capacity_metrics(table, release, start,
+                                                realized)
         return res, queue
 
     race = spec.race
+    metrics = None
     if reps == 1:
-        res, queue = replay_rep(build_rep(key), race, None)
+        out = replay_rep(build_rep(key), race, None)
     else:
         # Build all replications first, then hoist ONE active-count bound
         # (max over reps) shared by every replay: a per-rep (batched) bound
@@ -317,12 +332,19 @@ def _cluster_core(key, arrays, theta, r_min, r_j, choice_j, th_p, th_c,
         tables = jax.vmap(build_rep)(jax.random.split(key, reps))
         count_bound = jnp.max(jnp.sum(tables.active.astype(jnp.int32),
                                       axis=1))
-        res, queue = mean_over_reps(
-            jax.vmap(lambda t: replay_rep(t, race, count_bound))(tables))
+        out = jax.vmap(lambda t: replay_rep(t, race, count_bound))(tables)
+        if collect_metrics:
+            out = (*mean_over_reps(out[:2]), reduce_reps(out[2]))
+        else:
+            out = mean_over_reps(out)
+    if collect_metrics:
+        res, queue, metrics = out
+    else:
+        res, queue = out
     return ClusterOutput(
         result=res, r_opt=r_j,
         utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
-        theory_pocd=th_p, theory_cost=th_c, queue=queue)
+        theory_pocd=th_p, theory_cost=th_c, queue=queue, metrics=metrics)
 
 
 def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
@@ -331,7 +353,8 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
                          discipline: str = "fifo", passes: int = 2,
                          governor: Optional[GovernorConfig] = None,
                          admitted: Optional[np.ndarray] = None,
-                         reps: int = 1, width="auto") -> ClusterOutput:
+                         reps: int = 1, width="auto",
+                         collect_metrics: bool = False) -> ClusterOutput:
     """Two cached jit entries per strategy — the Algorithm-1 solve and the
     build->replay->metrics program — with no host<->device transfer inside
     the replay. Governor/admission stay host-side trace preprocessing
@@ -356,22 +379,27 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
         #                   identical program for detection-free strategies
     r_j = choice_j = th_p = th_c = None
     if get(strategy).optimized:
-        specs = jobspecs_of(jobs, p, jnp.float32(theta), jnp.float32(r_min))
-        if governor is not None and slots is not None:
-            specs = apply_governor(specs, jobs, slots, governor)
-        r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
-                                                      max_r + 1)
-        th_c = th_c * specs.C
-        if width == "auto":
-            width = int(jnp.max(r_j)) + 2
+        with obs_trace.span("cluster.solve", strategy=strategy,
+                            n_jobs=jobs.n_jobs):
+            specs = jobspecs_of(jobs, p, jnp.float32(theta),
+                                jnp.float32(r_min))
+            if governor is not None and slots is not None:
+                specs = apply_governor(specs, jobs, slots, governor)
+            r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
+                                                          max_r + 1)
+            th_c = th_c * specs.C
+            if width == "auto":
+                width = int(jnp.max(r_j)) + 2
     if width == "auto":
         width = None            # baselines are already minimal-width
     adm = None if admitted is None else jnp.asarray(admitted)
-    out = _cluster_core(
+    out = obs_trace.fenced(
+        f"cluster.replay[{strategy}]", _cluster_core,
         key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
         r_j, choice_j, th_p, th_c, adm, n_jobs=jobs.n_jobs,
         strategy=strategy, p=p, slots=slots, discipline=discipline,
-        passes=passes, max_r=max_r, oracle=oracle, reps=reps, width=width)
+        passes=passes, max_r=max_r, oracle=oracle, reps=reps, width=width,
+        collect_metrics=collect_metrics)
     return out._replace(queue=out.queue._replace(slots=slots))
 
 
@@ -382,7 +410,8 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
                 passes: int = 2,
                 governor: Optional[GovernorConfig] = None,
                 admission: Optional[AdmissionConfig] = None,
-                reps: int = 1, devices=None, mesh=None, chunk_jobs=None):
+                reps: int = 1, devices=None, mesh=None, chunk_jobs=None,
+                collect_metrics: bool = False):
     """Finite-capacity mirror of `sim.runner.run_all`.
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
@@ -408,7 +437,7 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
             r_min_from_ns=r_min_from_ns, max_r=max_r, oracle=oracle,
             discipline=discipline, passes=passes, governor=governor,
             admission=admission, reps=reps, mesh=mesh,
-            chunk_jobs=chunk_jobs)
+            chunk_jobs=chunk_jobs, collect_metrics=collect_metrics)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)
@@ -420,7 +449,8 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
         admitted = admit_jobs(jobs, slots, admission)
     kw = dict(slots=slots, theta=theta, max_r=max_r, oracle=oracle,
               discipline=discipline, passes=passes, governor=governor,
-              admitted=admitted, reps=reps)
+              admitted=admitted, reps=reps,
+              collect_metrics=collect_metrics)
     outs = {}
     r_min = 0.0
     if "hadoop_ns" in strategies:

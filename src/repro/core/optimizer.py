@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import trace as obs_trace
 from .utility import JobSpec, gamma, utility, pocd_of, cost_of
 
 
@@ -72,15 +73,17 @@ def utility_grid(strategy: str, job: JobSpec, r_max: int):
 
 def solve_grid(strategy: str, job: JobSpec, r_max: int | None = None) -> Solution:
     """Exact integer solve for one strategy (python wrapper, jit inside)."""
-    u0 = float(utility(strategy, jnp.float32(0.0), job))
-    if r_max is None:
-        r_max = max(r_upper_bound(strategy, job, u0), 2)
-    rs, us = utility_grid(strategy, job, r_max)
-    i = int(jnp.argmax(us))
-    r = float(rs[i])
-    return Solution(strategy, int(r), float(us[i]),
-                    float(pocd_of(strategy, r, job)),
-                    float(cost_of(strategy, r, job)))
+    with obs_trace.span("optimizer.solve_grid", strategy=strategy) as sp:
+        u0 = float(utility(strategy, jnp.float32(0.0), job))
+        if r_max is None:
+            r_max = max(r_upper_bound(strategy, job, u0), 2)
+        sp.set(r_max=int(r_max))
+        rs, us = utility_grid(strategy, job, r_max)
+        i = int(jnp.argmax(us))
+        r = float(rs[i])
+        return Solution(strategy, int(r), float(us[i]),
+                        float(pocd_of(strategy, r, job)),
+                        float(cost_of(strategy, r, job)))
 
 
 def solve(job: JobSpec, strategies=None) -> Solution:
@@ -92,12 +95,13 @@ def solve(job: JobSpec, strategies=None) -> Solution:
     if strategies is None:
         from ..strategies import names
         strategies = names(kind="chronos")
-    best = None
-    for s in strategies:
-        sol = solve_grid(s, job)
-        if best is None or sol.utility > best.utility:
-            best = sol
-    return best
+    with obs_trace.span("optimizer.solve", n_strategies=len(strategies)):
+        best = None
+        for s in strategies:
+            sol = solve_grid(s, job)
+            if best is None or sol.utility > best.utility:
+                best = sol
+        return best
 
 
 def solve_batch(strategy: str, jobs: JobSpec, r_max: int = 64):

@@ -33,6 +33,9 @@ from ..cluster.admission import (AdmissionConfig, GovernorConfig,
 from ..cluster.engine import (ClusterOutput, QueueMetrics, _narrow_table,
                               _replay_body)
 from ..cluster.slots import DISCIPLINES, utilization
+from ..obs import trace as obs_trace
+from ..obs.metrics import (capacity_metrics, combine_windows,
+                           reduce_reps_host)
 from ..sim.metrics import StreamCombiner, aggregate, net_utility
 from ..sim.runner import jobspecs_of, strategy_keys
 from ..sim.trace import jobset_arrays, jobset_of
@@ -44,7 +47,7 @@ from .runner import chunk_jobset, job_columns
 def _cluster_exec(rep_ids, key, arrays, r_j, choice_j, admitted, *,
                   n_jobs: int, strategy: str, p, slots: Optional[int],
                   discipline: str, passes: int, max_r: int, oracle: bool,
-                  width: Optional[int]):
+                  width: Optional[int], collect_metrics: bool):
     """Per-replication build -> replay -> metrics; vmapped over local reps.
 
     shard_map body: rep_ids is the sharded axis, everything else enters
@@ -75,8 +78,15 @@ def _cluster_exec(rep_ids, key, arrays, r_j, choice_j, admitted, *,
                                1.0)
         util = (utilization(realized.busy_time, slots, realized.span)
                 if slots is not None else jnp.float32(0.0))
-        return res, (jnp.sum(realized.wait) / n_active,
-                     jnp.max(realized.wait), util, realized.preempted)
+        q = (jnp.sum(realized.wait) / n_active,
+             jnp.max(realized.wait), util, realized.preempted)
+        if collect_metrics:
+            # per-rep functional accumulator; each rep is keyed by its
+            # GLOBAL index, so the pytree below is mesh-shape-invariant
+            # before any reduction even happens (static flag: off = the
+            # byte-identical historical program)
+            return res, q, capacity_metrics(table, release, start, realized)
+        return res, q
 
     # build all local replications first and hoist ONE shared active-count
     # bound: a per-rep (batched) bound would collapse the block-skip cond
@@ -93,7 +103,7 @@ def _cluster_core_impl(key, rep_ids, arrays, r_j, choice_j, admitted, *,
                        n_jobs: int, strategy: str, p,
                        slots: Optional[int], discipline: str, passes: int,
                        max_r: int, oracle: bool, width: Optional[int],
-                       mesh):
+                       mesh, collect_metrics: bool = False):
     """Compiled fan-out only: per-rep (SimResult, queue scalars), padded.
 
     As in `runner._core_impl`, the replication mean happens host-side in
@@ -103,7 +113,7 @@ def _cluster_core_impl(key, rep_ids, arrays, r_j, choice_j, admitted, *,
     exec_fn = functools.partial(
         _cluster_exec, n_jobs=n_jobs, strategy=strategy, p=p, slots=slots,
         discipline=discipline, passes=passes, max_r=max_r, oracle=oracle,
-        width=width)
+        width=width, collect_metrics=collect_metrics)
     args = (rep_ids, key, arrays, r_j, choice_j, admitted)
     if mesh is None or mesh.devices.size == 1:
         return exec_fn(*args)
@@ -115,7 +125,7 @@ def _cluster_core_impl(key, rep_ids, arrays, r_j, choice_j, admitted, *,
 
 _cluster_fleet_core = jax.jit(_cluster_core_impl, static_argnames=(
     "n_jobs", "strategy", "p", "slots", "discipline", "passes", "max_r",
-    "oracle", "width", "mesh"))
+    "oracle", "width", "mesh", "collect_metrics"))
 
 
 def _rep_mean(tree, reps: int):
@@ -153,7 +163,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                                admission: Optional[AdmissionConfig] = None,
                                reps: int = 1, width="auto",
                                chunk_jobs=None,
-                               pad_to: Optional[int] = None
+                               pad_to: Optional[int] = None,
+                               collect_metrics: bool = False
                                ) -> ClusterOutput:
     """Fleet mirror of `cluster.engine.run_cluster_strategy`.
 
@@ -190,12 +201,14 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     # outputs are kept; window JobSets (the task-axis memory) are rebuilt
     # one at a time in phase 2.
     bounds, solves = [], []
-    for ci in range(n_chunks):
-        lo, hi = ci * chunk, min((ci + 1) * chunk, J)
-        bounds.append((lo, hi))
-        solves.append(_solve_chunk(chunk_jobset(cols, lo, hi), strategy,
-                                   p, theta, r_min, max_r, slots,
-                                   governor))
+    with obs_trace.span("fleet.cluster.solve", strategy=strategy,
+                        n_jobs=J, n_chunks=n_chunks):
+        for ci in range(n_chunks):
+            lo, hi = ci * chunk, min((ci + 1) * chunk, J)
+            bounds.append((lo, hi))
+            solves.append(_solve_chunk(chunk_jobset(cols, lo, hi), strategy,
+                                       p, theta, r_min, max_r, slots,
+                                       governor))
     if width == "auto":
         width = (int(max(int(jnp.max(s[0])) for s in solves)) + 2
                  if get(strategy).optimized else None)
@@ -208,25 +221,37 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         admitted = None
         if admission is not None and slots is not None:
             admitted = jnp.asarray(admit_jobs(cjobs, slots, admission))
-        res, q = _cluster_fleet_core(
+        out = obs_trace.fenced(
+            f"fleet.cluster.replay[{strategy}]", _cluster_fleet_core,
             key, rep_ids, jobset_arrays(cjobs), r_j, choice_j, admitted,
             n_jobs=cjobs.n_jobs, strategy=strategy, p=p, slots=slots,
             discipline=discipline, passes=passes, max_r=max_r,
-            oracle=oracle, width=width, mesh=mesh)
-        res, q = _rep_mean((res, q), reps)
-        mean_wait, max_wait, util, preempted = q
-        admitted_frac = (1.0 if admitted is None
-                         else float(np.mean(np.asarray(admitted))))
-        queue = QueueMetrics(
-            mean_wait=jnp.float32(mean_wait),
-            max_wait=jnp.float32(max_wait),
-            utilization=jnp.float32(util),
-            preempted=jnp.float32(preempted),
-            admitted_frac=jnp.float32(admitted_frac), slots=slots)
-        acc.add(res, n_jobs=cjobs.n_jobs, queue=queue)
-        r_parts.append(np.asarray(r_j))
-        thp_parts.append(np.asarray(th_p))
-        thc_parts.append(np.asarray(th_c))
+            oracle=oracle, width=width, mesh=mesh,
+            collect_metrics=collect_metrics)
+        with obs_trace.span("fleet.cluster.reduce", window=len(r_parts)):
+            if collect_metrics:
+                res, q, rep_metrics = out
+                # pad+mask rep drop + fixed-order reduction, host-side —
+                # mesh topology cannot perturb the combined pytree
+                window_metrics = reduce_reps_host(rep_metrics, reps)
+            else:
+                res, q = out
+                window_metrics = None
+            res, q = _rep_mean((res, q), reps)
+            mean_wait, max_wait, util, preempted = q
+            admitted_frac = (1.0 if admitted is None
+                             else float(np.mean(np.asarray(admitted))))
+            queue = QueueMetrics(
+                mean_wait=jnp.float32(mean_wait),
+                max_wait=jnp.float32(max_wait),
+                utilization=jnp.float32(util),
+                preempted=jnp.float32(preempted),
+                admitted_frac=jnp.float32(admitted_frac), slots=slots)
+            acc.add(res, n_jobs=cjobs.n_jobs, queue=queue,
+                    capacity=window_metrics)
+            r_parts.append(np.asarray(r_j))
+            thp_parts.append(np.asarray(th_p))
+            thc_parts.append(np.asarray(th_c))
 
     result = acc.finalize()
     queue = acc.finalize_queue()
@@ -236,7 +261,7 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         utility=net_utility(result.pocd, result.mean_cost, r_min, theta),
         theory_pocd=jnp.asarray(np.concatenate(thp_parts)),
         theory_cost=jnp.asarray(np.concatenate(thc_parts)),
-        queue=queue)
+        queue=queue, metrics=acc.finalize_capacity())
 
 
 def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
@@ -246,7 +271,8 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
                       passes: int = 2,
                       governor: Optional[GovernorConfig] = None,
                       admission: Optional[AdmissionConfig] = None,
-                      reps: int = 1, mesh=None, chunk_jobs=None):
+                      reps: int = 1, mesh=None, chunk_jobs=None,
+                      collect_metrics: bool = False):
     """Fleet mirror of `cluster.engine.run_cluster` (same r_min protocol)."""
     if isinstance(jobs, str):
         from ..workloads.registry import make_trace
@@ -257,7 +283,7 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
     kw = dict(mesh=mesh, slots=slots, theta=theta, max_r=max_r,
               oracle=oracle, discipline=discipline, passes=passes,
               governor=governor, admission=admission, reps=reps,
-              chunk_jobs=chunk_jobs)
+              chunk_jobs=chunk_jobs, collect_metrics=collect_metrics)
     outs = {}
     r_min = 0.0
     if "hadoop_ns" in strategies:

@@ -39,6 +39,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..obs import trace as obs_trace
 from ..sim.metrics import SimResult, StreamCombiner, net_utility
 from ..sim.runner import RunOutput, jobspecs_of, strategy_keys
 from ..sim.trace import build_jobset
@@ -227,30 +228,37 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         lo, hi = ci * chunk, min((ci + 1) * chunk, J)
         cjobs = chunk_jobset(cols, lo, hi)
         Jc = cjobs.n_jobs
-        if not spec.optimized:
-            r_j = jnp.zeros((Jc,), jnp.int32)
-            choice_j = jnp.zeros((Jc,), jnp.int32)
-            th_p = jnp.zeros((Jc,))
-            th_c = jnp.zeros((Jc,))
-        else:
-            specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
-            r_j, choice_j, _, th_p, th_c = solve_jobs_jit(
-                strategy, specs, max_r + 1)
-            th_c = th_c * specs.C
-        layout = block_layout(cjobs, B, pad_blocks_to=job_ext,
-                              tasks_pad=Tb, min_blocks=min_blocks)
-        blocks = make_blocks(cjobs, B,
-                             block_offset=ci * blocks_per_chunk,
-                             layout=layout)
-        jid = np.asarray(cjobs.job_id)
-        r_b = stack_task_column(layout, np.asarray(r_j)[jid], 0, np.int32)
-        c_b = stack_task_column(layout, np.asarray(choice_j)[jid], 0,
-                                np.int32)
-        jc, jm = _fleet_core(key, rep_ids, blocks, r_b, c_b,
-                             strategy=strategy, p=p, max_r=max_r,
-                             oracle=oracle, mesh=mesh)
-        res = _chunk_result(jc, jm, cjobs.D, cjobs.C, reps, Jc, B)
-        acc.add(res, n_jobs=Jc)
+        with obs_trace.span("fleet.solve", strategy=strategy, chunk=ci,
+                            n_jobs=Jc):
+            if not spec.optimized:
+                r_j = jnp.zeros((Jc,), jnp.int32)
+                choice_j = jnp.zeros((Jc,), jnp.int32)
+                th_p = jnp.zeros((Jc,))
+                th_c = jnp.zeros((Jc,))
+            else:
+                specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
+                r_j, choice_j, _, th_p, th_c = solve_jobs_jit(
+                    strategy, specs, max_r + 1)
+                th_c = th_c * specs.C
+        with obs_trace.span("fleet.blocks", chunk=ci, block_jobs=B):
+            layout = block_layout(cjobs, B, pad_blocks_to=job_ext,
+                                  tasks_pad=Tb, min_blocks=min_blocks)
+            blocks = make_blocks(cjobs, B,
+                                 block_offset=ci * blocks_per_chunk,
+                                 layout=layout)
+            jid = np.asarray(cjobs.job_id)
+            r_b = stack_task_column(layout, np.asarray(r_j)[jid], 0,
+                                    np.int32)
+            c_b = stack_task_column(layout, np.asarray(choice_j)[jid], 0,
+                                    np.int32)
+        jc, jm = obs_trace.fenced(
+            f"fleet.exec[{strategy}]", _fleet_core,
+            key, rep_ids, blocks, r_b, c_b,
+            strategy=strategy, p=p, max_r=max_r,
+            oracle=oracle, mesh=mesh)
+        with obs_trace.span("fleet.reduce", chunk=ci, n_jobs=Jc):
+            res = _chunk_result(jc, jm, cjobs.D, cjobs.C, reps, Jc, B)
+            acc.add(res, n_jobs=Jc)
         r_parts.append(np.asarray(r_j))
         thp_parts.append(np.asarray(th_p))
         thc_parts.append(np.asarray(th_c))

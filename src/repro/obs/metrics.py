@@ -1,0 +1,162 @@
+"""Device-side metrics pytrees for the capacity replay.
+
+The hot paths are jitted `lax.scan`s, so in-loop observables cannot be
+side effects — they must be *functional*: a `CapacityMetrics` pytree is
+computed inside the compiled replay (cluster/engine.py single-device,
+fleet/cluster.py sharded) from the same (table, release, start, realized)
+arrays the replay already produces, returned as extra program outputs, and
+reduced host-side in one fixed order. No `io_callback`, no host
+round-trips, no mutation — which is what keeps instrumented runs
+bit-identical across mesh shapes and chunk splits, and lets the
+`collect_metrics=False` default compile a byte-identical program to an
+uninstrumented build (the flag is static; the metric ops simply never
+enter the jaxpr).
+
+Observables (the stability diagnostics of Anselmi & Walton,
+arXiv 2104.10426, plus the speculation accounting Chronos' governor
+needs):
+
+* `depth_hist` — histogram of per-attempt queue depth at its own release
+  time (units released but not yet started). Computed by order-statistic
+  counting over the sorted release/start arrays — O(U log U), no event
+  heap. Its total mass equals the dispatched-attempt count (`n_dispatched`)
+  by construction: the last bin is a clip bin, so no depth can fall off
+  the histogram (pinned by a hypothesis property in tests/test_obs.py).
+* `occupancy` — billed slot-seconds (the slot-occupancy integral).
+* `spec_launched` / `spec_killed` — active non-primary attempts dispatched
+  / attempts killed before finishing their work.
+* `busy_windows` — per-window count of waiting attempts over `N_WINDOWS`
+  equal slices of the replay span: a busy-period (queue-growth) indicator
+  per window; sustained growth across windows is the instability signal.
+* `depth_max`, `wait_total` — queue-growth scalars.
+
+Reductions: every counter/histogram/integral SUMS across replications and
+chunk windows (`depth_max` takes the max); `reps` counts the replications
+reduced in, so callers can normalize. Sums of int32 counters are exactly
+associative and the float sums happen host-side in a fixed (rep-index,
+chunk-index) order, never inside a device collective — the same
+determinism contract as the fleet layer's metric reductions (DESIGN.md
+§14, §15).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CapacityMetrics", "DEPTH_BINS", "N_WINDOWS",
+           "capacity_metrics", "reduce_reps", "reduce_reps_host",
+           "combine_windows"]
+
+DEPTH_BINS = 16      # queue-depth histogram bins (last bin clips)
+N_WINDOWS = 32       # busy-period windows over the replay span
+
+
+class CapacityMetrics(NamedTuple):
+    """Functional metrics accumulator — see module docstring."""
+    depth_hist: jnp.ndarray     # (DEPTH_BINS,) int32
+    depth_max: jnp.ndarray      # int32 scalar
+    occupancy: jnp.ndarray      # float32 scalar — billed slot-seconds
+    spec_launched: jnp.ndarray  # int32 scalar
+    spec_killed: jnp.ndarray    # int32 scalar
+    busy_windows: jnp.ndarray   # (N_WINDOWS,) int32
+    wait_total: jnp.ndarray     # float32 scalar
+    n_dispatched: jnp.ndarray   # int32 scalar — active attempt units
+    reps: jnp.ndarray           # int32 scalar — replications reduced in
+
+
+# reduction op per field: "sum" | "max" (reps counts via "sum")
+_REDUCE = {"depth_hist": "sum", "depth_max": "max", "occupancy": "sum",
+           "spec_launched": "sum", "spec_killed": "sum",
+           "busy_windows": "sum", "wait_total": "sum",
+           "n_dispatched": "sum", "reps": "sum"}
+
+
+def capacity_metrics(table, release, start, realized,
+                     depth_bins: int = DEPTH_BINS,
+                     n_windows: int = N_WINDOWS) -> CapacityMetrics:
+    """One replication's metrics from the replay's own arrays (traceable).
+
+    `table` is an AttemptTable (narrowed), `release`/`start` the (U,)
+    schedules the final pass dispatched, `realized` the Realized outcome.
+    Everything here is a pure function of those arrays, so a rep keyed by
+    its global index yields mesh-shape-invariant metrics for free.
+    """
+    active = table.active
+    act_i = active.astype(jnp.int32)
+
+    # queue depth at each unit's release: (# releases <= t) - (# starts <= t)
+    # over ACTIVE units, via order-statistic counting on sorted copies
+    rel_a = jnp.where(active, release, jnp.inf)
+    st_a = jnp.where(active, start, jnp.inf)
+    released = jnp.searchsorted(jnp.sort(rel_a), release, side="right")
+    started = jnp.searchsorted(jnp.sort(st_a), release, side="right")
+    depth = jnp.maximum((released - started).astype(jnp.int32), 0)
+    # log2-spaced bins (0, 1, 2-3, 4-7, ...): depths under contention span
+    # orders of magnitude, and the TAIL of this histogram is the signal —
+    # the last bin clips, so total mass always equals n_dispatched
+    dbin = jnp.where(
+        depth > 0,
+        jnp.floor(jnp.log2(jnp.maximum(depth, 1).astype(jnp.float32)))
+        .astype(jnp.int32) + 1, 0)
+    dbin = jnp.clip(dbin, 0, depth_bins - 1)
+    hist = jnp.zeros((depth_bins,), jnp.int32).at[dbin].add(act_i)
+    depth_max = jnp.max(jnp.where(active, depth, 0)).astype(jnp.int32)
+
+    # busy-period indicator: waiting attempts bucketed over the span
+    t0 = jnp.min(rel_a)
+    t0 = jnp.where(jnp.isfinite(t0), t0, 0.0)
+    frac = (release - t0) / realized.span
+    widx = jnp.clip((frac * n_windows).astype(jnp.int32), 0, n_windows - 1)
+    waiting = (active & (realized.wait > 0.0)).astype(jnp.int32)
+    busy = jnp.zeros((n_windows,), jnp.int32).at[widx].add(waiting)
+
+    spec_launched = jnp.sum(act_i * (~table.is_primary).astype(jnp.int32))
+    return CapacityMetrics(
+        depth_hist=hist, depth_max=depth_max,
+        occupancy=realized.busy_time.astype(jnp.float32),
+        spec_launched=spec_launched,
+        spec_killed=realized.preempted.astype(jnp.int32),
+        busy_windows=busy,
+        wait_total=jnp.sum(realized.wait).astype(jnp.float32),
+        n_dispatched=jnp.sum(act_i),
+        reps=jnp.int32(1))
+
+
+def _reduce(stacked: CapacityMetrics, xp) -> CapacityMetrics:
+    return CapacityMetrics(**{
+        f: (xp.sum(getattr(stacked, f), axis=0) if op == "sum"
+            else xp.max(getattr(stacked, f), axis=0))
+        for f, op in _REDUCE.items()})
+
+
+def reduce_reps(stacked: CapacityMetrics) -> CapacityMetrics:
+    """Device-side reduction over a leading (reps,) axis (engine path —
+    single device, so the in-program reduction order is fixed)."""
+    return _reduce(stacked, jnp)
+
+
+def reduce_reps_host(stacked, reps: int) -> CapacityMetrics:
+    """Host-side pad+mask reduction for the fleet path: drop padded
+    replications, then reduce the real ones in rep-index order with numpy
+    — never inside a device collective, so mesh topology cannot perturb
+    the result (bit-identical across mesh shapes)."""
+    host = CapacityMetrics(*(np.asarray(x)[:reps] for x in stacked))
+    return _reduce(host, np)
+
+
+def combine_windows(parts) -> CapacityMetrics:
+    """Combine per-chunk-window metrics in chunk order (host-side numpy).
+
+    Counters/histograms/integrals sum; `depth_max` takes the max;
+    `reps` stays the per-window replication count (windows replay the same
+    replications, so it maxes rather than sums)."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("combine_windows of no parts")
+    stacked = CapacityMetrics(
+        *(np.stack([np.asarray(getattr(m, f)) for m in parts])
+          for f in CapacityMetrics._fields))
+    out = _reduce(stacked, np)
+    return out._replace(reps=np.max(stacked.reps, axis=0))

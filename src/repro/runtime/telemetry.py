@@ -11,8 +11,15 @@ from dataclasses import dataclass, field
 class DurationWindow:
     """Thread-safe rolling window of observed durations (seconds)."""
     capacity: int = 512
-    _buf: deque = field(default_factory=lambda: deque(maxlen=512))
+    _buf: deque = field(default_factory=deque)
     _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def __post_init__(self):
+        # the deque's maxlen must follow `capacity` — a hardcoded default
+        # silently truncated DurationWindow(capacity=4096) to 512 samples
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        self._buf = deque(self._buf, maxlen=self.capacity)
 
     def record(self, seconds: float):
         with self._lock:
@@ -35,10 +42,11 @@ class Telemetry:
         self.counters: dict[str, int] = {}
         self._lock = threading.Lock()
 
-    def window(self, name: str) -> DurationWindow:
+    def window(self, name: str, capacity: int = 512) -> DurationWindow:
+        """Get or create the named window (`capacity` applies on create)."""
         with self._lock:
             if name not in self.windows:
-                self.windows[name] = DurationWindow()
+                self.windows[name] = DurationWindow(capacity=capacity)
             return self.windows[name]
 
     def bump(self, name: str, by: int = 1):

@@ -80,8 +80,10 @@ class StreamCombiner:
     def __init__(self):
         self._met, self._completion, self._cost = [], [], []
         self._weights, self._queues = [], []
+        self._capacity = []
 
-    def add(self, result: SimResult, n_jobs: int, queue=None) -> None:
+    def add(self, result: SimResult, n_jobs: int, queue=None,
+            capacity=None) -> None:
         import numpy as np
         self._met.append(np.asarray(result.job_met))
         self._completion.append(np.asarray(result.job_completion))
@@ -92,6 +94,10 @@ class StreamCombiner:
             # mixing queue-less and queue-bearing chunks can never
             # mis-weight a queue with another chunk's job count
             self._queues.append((float(n_jobs), queue))
+        if capacity is not None:
+            # device-side CapacityMetrics pytree for this chunk's window
+            # (repro.obs.metrics), combined in chunk order at finalize
+            self._capacity.append(capacity)
 
     @property
     def n_chunks(self) -> int:
@@ -127,3 +133,13 @@ class StreamCombiner:
                 sum(float(q.preempted) for q in queues)),
             admitted_frac=f([float(q.admitted_frac) for q in queues]),
             slots=q0.slots)
+
+    def finalize_capacity(self):
+        """Chunk-order combination of the per-window CapacityMetrics
+        pytrees (None when no chunk carried any). Counters, histograms,
+        and integrals sum — one fixed order, host-side — so the combined
+        pytree is invariant to mesh shape; see repro.obs.metrics."""
+        if not self._capacity:
+            return None
+        from ..obs.metrics import combine_windows
+        return combine_windows(self._capacity)

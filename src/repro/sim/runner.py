@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.utility import JobSpec, pocd_of, cost_of
+from ..obs import trace as obs_trace
 from ..strategies import get, index_of, names, solve_jobs
 from . import strategies as S
 from .metrics import aggregate, net_utility, SimResult
@@ -129,7 +130,10 @@ def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
     if not get(strategy).detectable:
         oracle = True     # oracle is static: don't compile a second
         #                   identical program for detection-free strategies
-    return _run_core(
+    # one fused solve+draw+reduce program: the fenced call attributes its
+    # dispatch (trace/compile) and device execution as separate spans
+    return obs_trace.fenced(
+        f"sim.run[{strategy}]", _run_core,
         key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
         None if r_override is None else jnp.int32(r_override),
         n_jobs=jobs.n_jobs, strategy=strategy, p=p, max_r=max_r,

@@ -151,14 +151,21 @@ def get_scenario(name: str) -> Scenario:
 def make_trace(name: str, n_jobs: Optional[int] = None,
                seed: Optional[int] = None) -> WorkloadTrace:
     """Synthesize the named scenario's trace (size/seed overridable)."""
+    from ..obs import trace as obs_trace
     s = get_scenario(name)
-    return synthesize(
-        s.classes, n_jobs=s.n_jobs if n_jobs is None else n_jobs,
-        seed=s.seed if seed is None else seed,
-        arrival=s.arrival, hours=s.hours, arrival_kw=s.arrival_kw)
+    with obs_trace.span("workloads.synthesize", scenario=name,
+                        n_jobs=s.n_jobs if n_jobs is None else n_jobs):
+        return synthesize(
+            s.classes, n_jobs=s.n_jobs if n_jobs is None else n_jobs,
+            seed=s.seed if seed is None else seed,
+            arrival=s.arrival, hours=s.hours, arrival_kw=s.arrival_kw)
 
 
 def make_jobset(name: str, n_jobs: Optional[int] = None,
                 seed: Optional[int] = None):
-    """Resolve a scenario name to a ready-to-run JobSet."""
+    """Resolve a scenario name to a ready-to-run JobSet.
+
+    (`to_jobset` records the workloads.jobset_build span itself, so the
+    timeline covers direct trace->jobset lowering too.)
+    """
     return to_jobset(make_trace(name, n_jobs=n_jobs, seed=seed))

@@ -74,9 +74,12 @@ class WorkloadTrace(NamedTuple):
 
 def to_jobset(trace: WorkloadTrace) -> JobSet:
     """Lower a trace to the flat JobSet both engines execute."""
-    return build_jobset(
-        trace.n_tasks, trace.t_min, trace.beta, trace.D, trace.arrival,
-        trace.C, job_class=trace.job_class, theta_scale=trace.theta_scale)
+    from ..obs import trace as obs_trace
+    with obs_trace.span("workloads.jobset_build",
+                        n_jobs=int(trace.n_tasks.shape[0])):
+        return build_jobset(
+            trace.n_tasks, trace.t_min, trace.beta, trace.D, trace.arrival,
+            trace.C, job_class=trace.job_class, theta_scale=trace.theta_scale)
 
 
 def save_trace(trace: WorkloadTrace, path) -> None:

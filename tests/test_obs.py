@@ -1,0 +1,391 @@
+"""Observability layer (repro.obs): spans, exports, device metrics, tails.
+
+Pins the layer's three contracts (DESIGN.md §15):
+
+* tracing OFF is free — `span` returns a shared no-op, `fenced` degrades
+  to a plain call, and the instrumented run's metric payloads are bitwise
+  identical to an uninstrumented run's;
+* the `CapacityMetrics` pytree is a pure function of the replay arrays —
+  histogram mass equals the dispatched-attempt count, and the reduced
+  pytree is bit-identical across mesh shapes, pad+mask overrides, and the
+  single-chunk/monolithic split;
+* tail telemetry recovers the Pareto tail it observes and drives the
+  observe -> refit -> re-solve hook end to end.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import run_cluster_strategy
+from repro.fleet import fleet_mesh, run_cluster_fleet_strategy
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import (CapacityMetrics, DEPTH_BINS, N_WINDOWS,
+                               combine_windows)
+from repro.obs.tail import TailGovernor, TailRegistry, TailWindow
+from repro.runtime.telemetry import DurationWindow
+from repro.sim import SimParams, run_strategy, uniform_jobset
+from repro.strategies import names
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Every test starts and ends with the global tracer disabled."""
+    obs_trace.disable()
+    obs_trace.get_tracer().clear()
+    yield
+    obs_trace.disable()
+    obs_trace.get_tracer().clear()
+
+
+@pytest.fixture(scope="module")
+def small_jobs():
+    return uniform_jobset(80, 10, t_min=10.0, beta=2.0, D=50.0)
+
+
+def metrics_equal(a: CapacityMetrics, b: CapacityMetrics) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in CapacityMetrics._fields)
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_disabled_is_shared_noop():
+    s1 = obs_trace.span("a", x=1)
+    s2 = obs_trace.span("b")
+    assert s1 is s2                       # one shared object, no allocation
+    with s1 as sp:
+        sp.set(y=2)                       # set() is a no-op, not an error
+    assert obs_trace.get_tracer().closed_spans() == []
+
+
+def test_span_nesting_depth_and_attrs():
+    obs_trace.enable()
+    with obs_trace.span("outer", stage="demo"):
+        with obs_trace.span("inner") as sp:
+            sp.set(n=3)
+    spans = {s.name: s for s in obs_trace.get_tracer().closed_spans()}
+    assert spans["outer"].depth == 0
+    assert spans["inner"].depth == 1
+    assert spans["inner"].attrs == {"n": 3}
+    assert spans["outer"].attrs == {"stage": "demo"}
+    assert spans["inner"].start_ns >= spans["outer"].start_ns
+    assert spans["inner"].end_ns <= spans["outer"].end_ns
+
+
+def test_enable_fresh_clears_prior_spans():
+    obs_trace.enable()
+    with obs_trace.span("old"):
+        pass
+    obs_trace.enable(fresh=True)
+    assert obs_trace.get_tracer().closed_spans() == []
+    obs_trace.enable(fresh=False)         # and fresh=False preserves
+    with obs_trace.span("new"):
+        pass
+    assert [s.name for s in obs_trace.get_tracer().closed_spans()] == ["new"]
+
+
+def test_fenced_dispatch_execute_and_compile_flag():
+    import jax.numpy as jnp
+    obs_trace.enable()
+    fn = jax.jit(lambda x: x * 2.0)
+    obs_trace.fenced("demo", fn, jnp.float32(3.0))
+    obs_trace.fenced("demo", fn, jnp.float32(4.0))
+    spans = obs_trace.get_tracer().closed_spans()
+    dispatch = [s for s in spans if s.name == "demo"]
+    execute = [s for s in spans if s.name == "demo.wait"]
+    assert len(dispatch) == 2 and len(execute) == 2
+    assert all(s.kind == "dispatch" for s in dispatch)
+    assert all(s.kind == "execute" for s in execute)
+    # first call compiles; the second hits the jit cache
+    assert dispatch[0].attrs.get("compiled") is True
+    assert "compiled" not in dispatch[1].attrs
+
+
+def test_fenced_disabled_is_plain_call():
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return x + 1
+
+    assert obs_trace.fenced("demo", fn, 41) == 42
+    assert calls == [41]
+    assert obs_trace.get_tracer().closed_spans() == []
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_export(tmp_path):
+    obs_trace.enable()
+    with obs_trace.span("outer", scenario="demo"):
+        with obs_trace.span("inner", kind="dispatch"):
+            pass
+    path = obs_export.write_chrome_trace(tmp_path / "t.json")
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    slices = {e["name"]: e for e in events if e["ph"] == "X"}
+    assert meta and meta[0]["args"]["name"] == "repro"
+    assert set(slices) == {"outer", "inner"}
+    assert slices["inner"]["cat"] == "dispatch"
+    assert slices["outer"]["args"] == {"scenario": "demo"}
+    # complete events: microsecond ts/dur, child nested inside parent
+    assert slices["inner"]["ts"] >= slices["outer"]["ts"]
+    assert (slices["inner"]["ts"] + slices["inner"]["dur"]
+            <= slices["outer"]["ts"] + slices["outer"]["dur"] + 1e-3)
+
+
+def test_stage_breakdown_self_time_excludes_children():
+    import time
+    obs_trace.enable()
+    with obs_trace.span("parent"):
+        with obs_trace.span("child"):
+            time.sleep(0.02)
+    rows = obs_export.stage_breakdown()
+    assert rows["child"]["total_ms"] >= 20.0
+    # the parent's self time excludes the child's 20 ms
+    assert rows["parent"]["self_ms"] <= rows["parent"]["total_ms"] - 15.0
+    assert rows["parent"]["count"] == rows["child"]["count"] == 1
+
+
+def test_traced_run_covers_pipeline(small_jobs):
+    """A traced end-to-end run: >= 95% of the wall-clock sits inside
+    spans, and the summary names the stage boundaries."""
+    obs_trace.enable()
+    run_strategy(KEY, small_jobs, "sresume", P, theta=1e-3)
+    run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=200,
+                         theta=1e-3)
+    names_seen = {s.name for s in obs_trace.get_tracer().closed_spans()}
+    assert {"sim.run[sresume]", "sim.run[sresume].wait", "cluster.solve",
+            "cluster.replay[sresume]"} <= names_seen
+    assert obs_export.coverage() >= 0.95
+    text = obs_export.summary()
+    assert "cluster.replay[sresume]" in text and "coverage" in text
+
+
+# ---------------------------------------------------------------------------
+# DurationWindow capacity (regression) + tail telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_duration_window_honors_capacity():
+    """Regression: capacity used to be ignored (deque hardcoded to 512)."""
+    w = DurationWindow(capacity=8)
+    for i in range(20):
+        w.record(float(i))
+    assert len(w) == 8
+    assert w.snapshot() == [float(i) for i in range(12, 20)]
+
+
+def test_duration_window_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        DurationWindow(capacity=0)
+
+
+def test_tail_window_recovers_pareto_beta():
+    rng = np.random.default_rng(0)
+    t_min, beta = 10.0, 1.5
+    xs = t_min * (1.0 - rng.random(512)) ** (-1.0 / beta)
+    win = TailWindow(capacity=512)
+    for x in xs:
+        win.observe(float(x))
+    fit = win.fit()
+    assert fit.n == 512 and fit.k == 52
+    assert fit.t_min == pytest.approx(float(xs.min()))
+    assert fit.beta == pytest.approx(beta, rel=0.2)
+    assert fit.beta_hill == pytest.approx(beta, rel=0.5)
+    assert win.quantile(0.5) >= t_min
+
+
+def test_tail_registry_subscribe_and_snapshot():
+    reg = TailRegistry(capacity=64)
+    seen = []
+    reg.subscribe("map", lambda name, fit: seen.append((name, fit.n)))
+    for i in range(10):
+        reg.observe("map", 10.0 + i)
+    fit = reg.refit("map")
+    assert seen == [("map", 10)]
+    assert reg.snapshot() == {"map": fit}
+
+
+def test_tail_governor_observe_refit_resolve():
+    rng = np.random.default_rng(1)
+    resolved = []
+    gov = TailGovernor(deadline=60.0, n_tasks=200, theta=1e-3,
+                       cadence=32, min_samples=8,
+                       on_resolve=lambda sol, fit: resolved.append(sol))
+    xs = 10.0 * (1.0 - rng.random(64)) ** (-1.0 / 1.5)
+    outs = [gov.observe(float(x)) for x in xs]
+    hits = [o for o in outs if o is not None]
+    assert len(hits) == 2 == len(resolved)   # every `cadence` observations
+    sol = gov.decision
+    assert sol is hits[-1]
+    assert sol.strategy in names(kind="chronos")
+    assert 0 <= sol.r_opt <= gov.max_r
+    assert np.isfinite(sol.utility)
+    assert gov.last_fit is not None and gov.last_fit.beta > 1.0
+
+
+def test_tail_governor_deadline_below_floor():
+    gov = TailGovernor(deadline=1.0, n_tasks=50, cadence=4, min_samples=2)
+    for x in (10.0, 12.0, 11.0, 13.0):
+        gov.observe(x)
+    assert gov.decision is None     # deadline below the observed t_min
+
+
+# ---------------------------------------------------------------------------
+# device-side CapacityMetrics
+# ---------------------------------------------------------------------------
+
+
+def test_engine_metrics_off_by_default(small_jobs):
+    out = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=200,
+                               theta=1e-3)
+    assert out.metrics is None
+
+
+def test_engine_metrics_do_not_perturb_results(small_jobs):
+    """Instrumented replay == uninstrumented replay, bit for bit."""
+    ref = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=200,
+                               theta=1e-3)
+    out = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=200,
+                               theta=1e-3, collect_metrics=True)
+    for fld in ("job_met", "job_completion", "job_cost"):
+        assert np.array_equal(np.asarray(getattr(ref.result, fld)),
+                              np.asarray(getattr(out.result, fld))), fld
+    for fld in ("mean_wait", "max_wait", "utilization", "preempted"):
+        assert float(getattr(ref.queue, fld)) == \
+            float(getattr(out.queue, fld)), fld
+    assert out.metrics is not None
+
+
+def test_engine_metrics_mass_conservation(small_jobs):
+    out = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=200,
+                               theta=1e-3, collect_metrics=True)
+    m = out.metrics
+    assert m.depth_hist.shape == (DEPTH_BINS,)
+    assert m.busy_windows.shape == (N_WINDOWS,)
+    # the clip bin guarantees no depth falls off the histogram
+    assert int(m.depth_hist.sum()) == int(m.n_dispatched)
+    assert int(m.n_dispatched) >= small_jobs.total_tasks
+    assert int(m.busy_windows.sum()) <= int(m.n_dispatched)
+    assert int(m.spec_launched) <= int(m.n_dispatched)
+    assert float(m.occupancy) > 0.0
+    assert int(m.reps) == 1
+
+
+def test_engine_metrics_reps_reduce(small_jobs):
+    out = run_cluster_strategy(KEY, small_jobs, "sresume", P, slots=200,
+                               theta=1e-3, reps=3, collect_metrics=True)
+    m = out.metrics
+    assert int(m.reps) == 3
+    assert int(m.depth_hist.sum()) == int(m.n_dispatched)
+    # counters summed over replications: at least reps * tasks
+    assert int(m.n_dispatched) >= 3 * small_jobs.total_tasks
+
+
+def test_fleet_metrics_do_not_perturb_results(small_jobs):
+    """Instrumented fleet replay == uninstrumented, bit for bit. (The
+    fleet path keys draws per replication, so its metrics legitimately
+    differ from the engine path's — each is self-consistent.)"""
+    ref = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3)
+    out = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3,
+                                     collect_metrics=True)
+    assert ref.metrics is None and out.metrics is not None
+    for fld in ("job_met", "job_completion", "job_cost"):
+        assert np.array_equal(np.asarray(getattr(ref.result, fld)),
+                              np.asarray(getattr(out.result, fld))), fld
+    for fld in ("mean_wait", "max_wait", "utilization", "preempted"):
+        assert float(getattr(ref.queue, fld)) == \
+            float(getattr(out.queue, fld)), fld
+    assert int(out.metrics.depth_hist.sum()) == int(out.metrics.n_dispatched)
+
+
+def test_fleet_metrics_pad_invariance(small_jobs):
+    """Rep padding (pad+mask) must not leak into the reduced metrics."""
+    ref = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3, reps=3,
+                                     collect_metrics=True)
+    out = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3, reps=3,
+                                     pad_to=4, collect_metrics=True)
+    assert metrics_equal(ref.metrics, out.metrics)
+    assert int(ref.metrics.reps) == 3
+
+
+def test_fleet_metrics_single_chunk_equals_monolithic(small_jobs):
+    """chunk_jobs >= J is one window — bitwise the monolithic replay.
+    (Smaller chunks replay per-window slot pools: genuinely different
+    dynamics, covered by the mass-conservation test below.)"""
+    ref = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3,
+                                     collect_metrics=True)
+    out = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3,
+                                     chunk_jobs=small_jobs.n_jobs,
+                                     collect_metrics=True)
+    assert metrics_equal(ref.metrics, out.metrics)
+
+
+def test_fleet_metrics_chunked_mass_conservation(small_jobs):
+    out = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3, chunk_jobs=30,
+                                     collect_metrics=True)
+    m = out.metrics
+    assert int(m.depth_hist.sum()) == int(m.n_dispatched)
+    assert int(m.n_dispatched) >= small_jobs.total_tasks
+    assert int(m.reps) == 1        # windows share replications: max, not sum
+
+
+def test_combine_windows_sums_and_maxes():
+    a = CapacityMetrics(
+        depth_hist=np.arange(DEPTH_BINS, dtype=np.int32),
+        depth_max=np.int32(3), occupancy=np.float32(10.0),
+        spec_launched=np.int32(4), spec_killed=np.int32(1),
+        busy_windows=np.ones(N_WINDOWS, np.int32),
+        wait_total=np.float32(2.0), n_dispatched=np.int32(120),
+        reps=np.int32(2))
+    b = a._replace(depth_max=np.int32(7), occupancy=np.float32(5.0))
+    m = combine_windows([a, b])
+    assert np.array_equal(m.depth_hist,
+                          2 * np.arange(DEPTH_BINS, dtype=np.int32))
+    assert int(m.depth_max) == 7
+    assert float(m.occupancy) == 15.0
+    assert int(m.n_dispatched) == 240
+    assert int(m.reps) == 2
+    with pytest.raises(ValueError):
+        combine_windows([])
+
+
+@multi_device
+def test_fleet_metrics_mesh_shape_invariance(small_jobs):
+    """1x1 / 2x4 / 8x1 meshes reduce to bit-identical metric pytrees
+    (reps=3 does not divide 8, so rep pad+mask is exercised too)."""
+    ref = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                     slots=200, theta=1e-3, reps=3,
+                                     collect_metrics=True)
+    for shape in [(1, 1), (2, 4), (8, 1)]:
+        out = run_cluster_fleet_strategy(KEY, small_jobs, "sresume", P,
+                                         slots=200, theta=1e-3, reps=3,
+                                         mesh=fleet_mesh(shape=shape),
+                                         collect_metrics=True)
+        assert metrics_equal(ref.metrics, out.metrics), shape

@@ -126,3 +126,35 @@ def test_kernel_oracle_invariants(n_tasks, r_max, beta):
     met_hi, _ = pocd_mc_ref(u, 10 * ones, beta * ones, 300 * ones, r)
     assert (np.asarray(met_hi) >= np.asarray(met_lo) - 1e-6).all()
     assert (np.asarray(cost) >= n_tasks * 10.0 - 1e-3).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1), st.floats(0.0, 0.9))
+def test_capacity_metrics_histogram_mass(n_units, seed, inactive_frac):
+    """repro.obs.metrics: the queue-depth histogram's total mass equals the
+    dispatched-attempt count for ANY release/start schedule — the clip bin
+    means no depth can fall off the histogram."""
+    from repro.obs.metrics import capacity_metrics
+    from repro.cluster.events import Realized
+    from repro.strategies.table import AttemptTable
+    rng = np.random.default_rng(seed)
+    release = rng.uniform(0.0, 100.0, n_units).astype(np.float32)
+    start = (release + rng.uniform(0.0, 50.0, n_units)).astype(np.float32)
+    active = rng.random(n_units) >= inactive_frac
+    is_primary = rng.random(n_units) < 0.5
+    z = np.zeros(n_units, np.float32)
+    table = AttemptTable(
+        task_id=np.arange(n_units, dtype=np.int32),
+        job_id=np.zeros(n_units, np.int32), rel_offset=z, dur=z + 1.0,
+        hold_cap=z, can_win=active, active=active, is_primary=is_primary)
+    realized = Realized(
+        task_completion=start + 1.0, task_machine=z + 1.0,
+        wait=np.where(active, start - release, 0.0).astype(np.float32),
+        busy_time=np.float32(float(n_units)),
+        span=np.float32(max(float(start.max() + 1.0), 1.0)),
+        preempted=np.int32(0))
+    m = capacity_metrics(table, jnp.asarray(release), jnp.asarray(start),
+                         realized)
+    assert int(m.depth_hist.sum()) == int(m.n_dispatched) == int(active.sum())
+    assert int(m.busy_windows.sum()) <= int(m.n_dispatched)
+    assert int(m.depth_max) <= int(active.sum())
