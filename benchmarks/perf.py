@@ -207,6 +207,49 @@ def bench_fleet_chunked(n_jobs=2000, chunk_jobs=512, block_jobs=64,
     return dt, n_jobs / dt
 
 
+def bench_fleet_chaos(n_jobs=1200, chunk_jobs=256, block_jobs=64,
+                      iters=4):
+    """Chunked fleet run under fault injection: an injected chunk failure
+    plus a corrupted payload (both retried) and chunk-boundary
+    checkpointing to a scratch directory. Times the full recovery path —
+    retry re-execution, NaN integrity scan, checkpoint serialization —
+    so the gate guards the chaos-lane overhead on top of fleet_chunked.
+    Derived metric: jobs streamed/sec through the faulted run."""
+    import shutil
+    import tempfile
+
+    from repro.chaos import CheckpointConfig, ChaosContext, from_faults
+    from repro.fleet import run_fleet_strategy
+
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+    plan = from_faults([
+        {"kind": "chunk_fail", "chunk": 1, "count": 1},
+        {"kind": "corrupt", "chunk": 2, "count": 1},
+    ])
+    root = tempfile.mkdtemp(prefix="bench_fleet_chaos_")
+
+    def run():
+        # fresh context per run: injection budgets are consumed state
+        ctx = ChaosContext(plan, backoff_base=0.0)
+        cfg = CheckpointConfig(directory=f"{root}/ckpt", keep=2,
+                               use_async=False)
+        out = run_fleet_strategy(key, jobs, "sresume", p, reps=1,
+                                 block_jobs=block_jobs,
+                                 chunk_jobs=chunk_jobs, chaos=ctx,
+                                 checkpoint=cfg)
+        jax.block_until_ready(out.result.job_cost)
+
+    try:
+        run()
+        run()    # warmup: per-chunk compiles
+        dt = min(_time(run, warmup=0, iters=1) for _ in range(iters))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return dt, n_jobs / dt
+
+
 def bench_workload_synthesize(n_jobs=2700, scenario="diurnal-burst"):
     """Scenario resolution -> trace synthesis -> JobSet lowering (the
     offline workload path every heterogeneous evaluation pays once)."""

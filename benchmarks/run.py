@@ -111,6 +111,13 @@ def perf_benches(perf, smoke: bool):
             ("fleet_chunked",
              lambda: perf.bench_fleet_chunked(n_jobs=300, chunk_jobs=96,
                                               block_jobs=32, iters=4)),
+            # chaos layer: the same chunked streamer under fault injection
+            # (injected failure + corruption, both retried) with
+            # chunk-boundary checkpoints, so the gate guards the recovery
+            # path's overhead
+            ("fleet_chaos",
+             lambda: perf.bench_fleet_chaos(n_jobs=300, chunk_jobs=96,
+                                            block_jobs=32, iters=4)),
         ]
     return [
         ("optimizer_batch_solve", perf.bench_optimizer_throughput),
@@ -127,6 +134,7 @@ def perf_benches(perf, smoke: bool):
          lambda: perf.bench_new_strategy("adaptive")),
         ("fleet_sharded", perf.bench_fleet_sharded),
         ("fleet_chunked", perf.bench_fleet_chunked),
+        ("fleet_chaos", perf.bench_fleet_chaos),
     ]
 
 

@@ -32,6 +32,18 @@ dispatch vs device execute); `--trace-out PATH` additionally writes the
 timeline as Chrome-trace JSON, openable in https://ui.perfetto.dev or
 chrome://tracing.
 
+With `--chaos` the run executes under fault injection (`repro.chaos`):
+the scenario's declared fault schedule (e.g. `pod-loss-flash-crowd`
+loses 2 devices at chunk 2 and 2 more at chunk 5) — or, for scenarios
+without one, a seeded generated plan — fires at chunk boundaries, with
+retry/backoff on injected failures, mesh shrink + re-pad on device loss,
+and an audit report printed after the run. `--chaos` implies the fleet
+path (chunk_jobs defaults to jobs/8 when unset). `--ckpt-dir DIR`
+checkpoints the resumable chunk state after every chunk
+(atomic + async, bounded retention); after a crash — simulated or real —
+re-running with `--resume` restores the latest committed checkpoint and
+finishes the run bit-identically to an uninterrupted one.
+
 Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
       PYTHONPATH=src python examples/simulate_cluster.py --jobs 200 --slots 2000
       PYTHONPATH=src python examples/simulate_cluster.py \
@@ -41,6 +53,12 @@ Run:  PYTHONPATH=src python examples/simulate_cluster.py [--jobs 2700]
           --jobs 20000 --devices 8 --chunk-jobs 4096 --reps 4
       PYTHONPATH=src python examples/simulate_cluster.py \
           --jobs 100 --slots 500 --trace --trace-out trace.json
+      PYTHONPATH=src python examples/simulate_cluster.py \
+          --scenario pod-loss-flash-crowd --jobs 400 --devices 8 \
+          --chunk-jobs 64 --chaos --ckpt-dir /tmp/chaos_ckpt
+      PYTHONPATH=src python examples/simulate_cluster.py \
+          --scenario pod-loss-flash-crowd --jobs 400 --devices 8 \
+          --chunk-jobs 64 --chaos --ckpt-dir /tmp/chaos_ckpt --resume
 """
 import argparse
 import os
@@ -76,6 +94,16 @@ ap.add_argument("--block-jobs", type=int, default=64,
 ap.add_argument("--reps", type=int, default=1,
                 help="Monte-Carlo replications (fleet: sharded over the "
                      "mesh's rep axis)")
+ap.add_argument("--chaos", action="store_true",
+                help="inject the scenario's fault schedule (or a seeded "
+                     "generated plan) at chunk boundaries; implies the "
+                     "fleet path and prints a chaos report")
+ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                help="checkpoint resumable chunk state under DIR (atomic "
+                     "+ async, bounded retention)")
+ap.add_argument("--resume", action="store_true",
+                help="resume from the latest committed checkpoint in "
+                     "--ckpt-dir (bit-identical to an uninterrupted run)")
 ap.add_argument("--trace", action="store_true",
                 help="enable span tracing (repro.obs): prints a per-stage "
                      "wall-clock breakdown after the run")
@@ -118,7 +146,11 @@ if args.strategies:
 else:
     ORDER = names()
 
-use_fleet = args.devices > 0 or args.chunk_jobs > 0
+if args.resume and not args.ckpt_dir:
+    ap.error("--resume requires --ckpt-dir")
+
+use_fleet = (args.devices > 0 or args.chunk_jobs > 0 or args.chaos
+             or bool(args.ckpt_dir))
 if args.scenario:
     trace = make_trace(args.scenario, n_jobs=args.jobs, seed=args.seed)
     # the fleet layer consumes the columnar trace directly and streams it
@@ -137,21 +169,57 @@ print(f"trace: {jobs.n_jobs} jobs, {jobs.total_tasks} tasks, "
 
 devices = args.devices if args.devices > 0 else None
 chunk_jobs = args.chunk_jobs if args.chunk_jobs > 0 else None
+if use_fleet and chunk_jobs is None and (args.chaos or args.ckpt_dir):
+    # chaos/checkpointing act at chunk boundaries — default to ~8 chunks
+    chunk_jobs = max(1, args.jobs // 8)
 if devices:
     print(f"fleet: {len(jax.devices())} devices"
           + (f", chunks of {chunk_jobs} jobs" if chunk_jobs else ""))
+
+chaos_plan = None
+if args.chaos:
+    from repro.chaos import from_faults, generate as generate_faults
+    from repro.workloads import get_scenario
+    faults = (getattr(get_scenario(args.scenario), "faults", None)
+              if args.scenario else None)
+    if faults:
+        chaos_plan = from_faults(faults, seed=args.seed)
+        print(f"chaos: scenario fault schedule "
+              f"[{chaos_plan.fingerprint()}]")
+    else:
+        n_chunks = -(-args.jobs // (chunk_jobs or args.jobs))
+        chaos_plan = generate_faults(
+            seed=args.seed, n_chunks=n_chunks, p_device_loss=0.1,
+            p_chunk_fail=0.15, p_corrupt=0.1)
+        print(f"chaos: generated plan [{chaos_plan.fingerprint()}]")
+ckpt_cfg = args.ckpt_dir
+
+def _run_or_crash(fn, *a, **kw):
+    """Run; on a simulated (plan-scheduled) crash, tell the user how to
+    finish the run instead of dumping a traceback."""
+    from repro.chaos import SimulatedCrash
+    try:
+        return fn(*a, **kw)
+    except SimulatedCrash as e:
+        raise SystemExit(
+            f"chaos: simulated crash after chunk {e.chunk} (checkpoint "
+            f"committed to {args.ckpt_dir}) — re-run with --resume to "
+            f"finish the run bit-identically")
+
 
 if args.slots > 0:
     from repro.cluster import (run_cluster, GovernorConfig, AdmissionConfig)
     governor = GovernorConfig() if args.governor else None
     admission = (AdmissionConfig(slack=args.admission_slack)
                  if args.admission_slack > 0 else None)
-    outs, r_min = run_cluster(jax.random.PRNGKey(0), jobs, SimParams(),
-                              slots=args.slots, theta=args.theta,
-                              strategies=ORDER, reps=args.reps,
-                              discipline=args.discipline, passes=args.passes,
-                              governor=governor, admission=admission,
-                              devices=devices, chunk_jobs=chunk_jobs)
+    outs, r_min = _run_or_crash(
+        run_cluster, jax.random.PRNGKey(0), jobs, SimParams(),
+        slots=args.slots, theta=args.theta,
+        strategies=ORDER, reps=args.reps,
+        discipline=args.discipline, passes=args.passes,
+        governor=governor, admission=admission,
+        devices=devices, chunk_jobs=chunk_jobs,
+        chaos=chaos_plan, checkpoint=ckpt_cfg, resume=args.resume)
     print(f"capacity: {args.slots} slots, {args.discipline} dispatch"
           + (", governor on" if governor else "")
           + (f", admission slack {args.admission_slack}" if admission else ""))
@@ -165,10 +233,12 @@ if args.slots > 0:
               f"{float(o.queue.utilization):6.3f} "
               f"{float(o.queue.mean_wait):8.2f}")
 else:
-    outs, r_min = run_all(jax.random.PRNGKey(0), jobs, SimParams(),
-                          theta=args.theta, strategies=ORDER,
-                          reps=args.reps, devices=devices,
-                          block_jobs=args.block_jobs, chunk_jobs=chunk_jobs)
+    outs, r_min = _run_or_crash(
+        run_all, jax.random.PRNGKey(0), jobs, SimParams(),
+        theta=args.theta, strategies=ORDER,
+        reps=args.reps, devices=devices,
+        block_jobs=args.block_jobs, chunk_jobs=chunk_jobs,
+        chaos=chaos_plan, checkpoint=ckpt_cfg, resume=args.resume)
     print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} "
           f"{'mean r*':>8s}")
     for name in ORDER:

@@ -1,0 +1,26 @@
+"""repro.chaos — deterministic fault injection + recovery for fleet runs.
+
+Declarative seeded fault schedules (`FaultPlan`), a chunk-boundary
+injection runtime (`ChaosContext`), capacity-aware re-solving
+(`ElasticGovernor`), and chunk checkpoint/resume (`CheckpointConfig`,
+`resume_fleet`) — see DESIGN.md §16 for the failure model.
+"""
+from .governor import ElasticGovernor
+from .inject import (ChaosContext, ChaosExhausted, ChunkCorruptionDetected,
+                     InjectedChunkFailure, SimulatedCrash, as_context)
+from .plan import (EMPTY_PLAN, KINDS, FaultEvent, FaultPlan, from_faults,
+                   generate)
+from .recovery import (CheckpointConfig, ChunkCheckpointer, as_checkpoint,
+                       check_fingerprint, pack_run_state, pack_state,
+                       resume_cluster_fleet, resume_fleet, run_fingerprint,
+                       unpack_run_state, unpack_state)
+
+__all__ = [
+    "KINDS", "FaultEvent", "FaultPlan", "EMPTY_PLAN", "from_faults",
+    "generate", "ChaosContext", "as_context", "SimulatedCrash",
+    "InjectedChunkFailure", "ChunkCorruptionDetected", "ChaosExhausted",
+    "ElasticGovernor", "CheckpointConfig", "ChunkCheckpointer",
+    "as_checkpoint", "pack_state", "unpack_state", "pack_run_state",
+    "unpack_run_state", "check_fingerprint", "run_fingerprint",
+    "resume_fleet", "resume_cluster_fleet",
+]

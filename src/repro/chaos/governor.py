@@ -1,0 +1,94 @@
+"""ElasticGovernor: capacity loss -> new per-slot price C -> r* re-solve.
+
+Chronos solves r* against a fixed price C per unit machine time. When a
+pod dies mid-run the surviving capacity is scarcer, so the effective
+price of a speculative copy rises — and Anselmi & Walton (arXiv
+2104.10426) show that keeping the old speculation level on the smaller
+system is not merely suboptimal, it can push a capacity-constrained
+queue past its stability boundary. The governor therefore maps every
+capacity change to a cost multiplier
+
+    scale = (base_devices / alive_devices) ** alpha
+
+(alpha = 1: price inversely proportional to surviving capacity) and the
+fleet runner applies the chunk's scale to `JobSpec.C` before each
+not-yet-dispatched chunk's Algorithm-1 solve — dispatched chunks keep the
+r* they ran with, exactly like dispatched attempts keep their machines.
+
+The schedule is a PURE function of (FaultPlan, base capacity): cost
+scales are precomputed for every chunk boundary at bind time, so a
+resumed run reconstructs the identical trajectory with no event replay —
+the same idea that makes the fleet PRNG resumable.
+
+`ElasticGovernor` optionally composes an `obs.tail.TailGovernor`: on a
+capacity event it re-prices the tail governor's `price` and forces its
+observe->refit->re-solve hook, so the (strategy, r*) decision visible in
+`decision` reflects both the freshly fitted tail AND the new capacity —
+the strategy switch the span trace records.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from ..obs import trace as obs_trace
+
+
+@dataclass
+class ElasticGovernor:
+    """Re-solve policy under capacity loss (see module docstring).
+
+    alpha:        cost elasticity — scale = (base/alive)^alpha.
+    tail:         optional `obs.tail.TailGovernor` to re-price + re-solve
+                  on every capacity event (its `decision` then carries
+                  the concrete (strategy, r*) switch).
+    min_alive:    refuse to re-solve below this many devices (treat as an
+                  outage rather than an elastic event).
+    base_devices: logical base capacity override. Default (None) prices
+                  against the run's actual mesh size; setting it lets a
+                  small host (or a simulation) price losses against the
+                  cluster capacity the plan models.
+    """
+    alpha: float = 1.0
+    tail: Optional[object] = None
+    min_alive: int = 1
+    base_devices: Optional[int] = None
+    history: list = field(default_factory=list)   # (chunk, alive, scale)
+
+    def __post_init__(self):
+        if self.tail is not None:
+            self._base_price = float(self.tail.price)
+        self.decision = None
+
+    def schedule(self, plan, n_chunks: int, base_devices: int) -> np.ndarray:
+        """(n_chunks,) cost scale at each chunk boundary — pure in
+        (plan, base_devices). device_loss events compound; a chunk's scale
+        covers its own boundary's events (loss at chunk k re-prices chunk
+        k's solve)."""
+        alive = max(int(base_devices), 1)
+        scales = np.ones((max(n_chunks, 1),), np.float64)
+        for ci in range(n_chunks):
+            for e in plan.at(ci, "device_loss"):
+                lost = len(e.device_ids) if e.device_ids else e.count
+                alive = max(alive - lost, self.min_alive)
+            scales[ci] = (base_devices / alive) ** self.alpha
+        return scales
+
+    def on_capacity(self, chunk: int, alive: int, base_devices: int,
+                    scale: float) -> None:
+        """Record a capacity event; re-solve the composed tail governor at
+        the new price (when it has samples to fit)."""
+        self.history.append((int(chunk), int(alive), float(scale)))
+        if self.tail is None:
+            return
+        self.tail.price = self._base_price * float(scale)
+        win = self.tail.registry.window(self.tail.window_name)
+        if len(win) >= max(self.tail.min_samples, 2):
+            with obs_trace.span("chaos.resolve", chunk=chunk, alive=alive,
+                                cost_scale=float(scale)) as sp:
+                self.decision = self.tail.resolve()
+                if self.decision is not None:
+                    sp.set(strategy=self.decision.strategy,
+                           r_opt=int(self.decision.r_opt))

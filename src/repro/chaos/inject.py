@@ -1,0 +1,295 @@
+"""ChaosContext: the runtime that applies a FaultPlan at chunk boundaries.
+
+The fleet chunk loops (`fleet/runner.py`, `fleet/cluster.py`) consult one
+`ChaosContext` per run at three points, all host-side:
+
+    begin_chunk(ci, mesh)  -> possibly shrunken mesh (device_loss)
+    execute(ci, thunk)     -> retry/backoff loop around the compiled chunk
+                              (chunk_fail injection, corruption detection)
+    maybe_crash(ci)        -> raises SimulatedCrash after chunk ci's
+                              checkpoint committed (crash events)
+
+Everything is deterministic given (FaultPlan, run key): injected failures
+count down a per-chunk budget, corruption poisons NaN positions drawn
+from a PCG64 stream seeded by (plan.seed, chunk), and retries re-execute
+the same compiled program on the same inputs — so the recovered result is
+bit-identical to an un-faulted run, which is the invariant the chaos
+tests pin. With `chaos=None` the runners never construct this object and
+run the exact pre-chaos code path (no new jaxpr, no extra host work).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..obs import trace as obs_trace
+from .plan import FaultPlan
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised after chunk `chunk`'s checkpoint commits — the test double
+    for a killed process. Catch it, then `resume_fleet()`."""
+
+    def __init__(self, chunk: int):
+        self.chunk = int(chunk)
+        super().__init__(f"simulated crash after chunk {chunk}")
+
+
+class InjectedChunkFailure(RuntimeError):
+    """An injected launch failure of one chunk execution attempt."""
+
+
+class ChunkCorruptionDetected(RuntimeError):
+    """The integrity check found non-finite values in a chunk's metrics
+    payload — the chunk must be re-executed."""
+
+
+class ChaosExhausted(RuntimeError):
+    """A chunk kept failing past max_attempts — the fault is treated as
+    permanent and surfaced instead of retried forever."""
+
+
+def _poison(tree, rng: np.random.Generator):
+    """NaN-poison a deterministic subset of every float leaf (host-side
+    copy — the device buffers, and hence the retry, stay clean)."""
+    def one(x):
+        a = np.array(x)          # copy; never mutate the device result
+        if a.dtype.kind != "f" or a.size == 0:
+            return a
+        flat = a.reshape(-1)
+        n = max(1, flat.size // 8)
+        idx = rng.choice(flat.size, size=min(n, flat.size), replace=False)
+        flat[idx] = np.nan
+        return a
+    return jax.tree.map(one, tree)
+
+
+def _has_nan(tree) -> bool:
+    # NaN only: the raw (pre-mask) chunk payloads legitimately carry
+    # +/-inf in padded cells (segment_max over an empty dummy segment),
+    # while a NaN cannot arise in the simulator's metrics by construction
+    for leaf in jax.tree.leaves(tree):
+        a = np.asarray(leaf)
+        if a.dtype.kind == "f" and np.isnan(a).any():
+            return True
+    return False
+
+
+class ChaosContext:
+    """One run's fault-injection state machine (see module docstring).
+
+    backoff_base: first retry delay in seconds, doubling per attempt
+        (0 = no sleeping — what the tests use; the delays are recorded
+        either way so the schedule is observable).
+    max_attempts: attempts per chunk before ChaosExhausted.
+    governor: optional `chaos.governor.ElasticGovernor` — its cost-scale
+        schedule re-prices every chunk's Algorithm-1 solve.
+    """
+
+    def __init__(self, plan: FaultPlan, governor=None,
+                 max_attempts: int = 4, backoff_base: float = 0.05,
+                 sleep=time.sleep):
+        plan.validate()
+        self.plan = plan
+        self.governor = governor
+        self.max_attempts = int(max_attempts)
+        self.backoff_base = float(backoff_base)
+        self._sleep = sleep
+        self.records: list = []        # (chunk, kind, detail) audit log
+        self._fail_left: dict = {}     # chunk -> injected failures left
+        self._corrupt_left: dict = {}  # chunk -> poisonings left
+        for e in plan.events:
+            if e.kind == "chunk_fail":
+                self._fail_left[e.chunk] = \
+                    self._fail_left.get(e.chunk, 0) + e.count
+            elif e.kind == "corrupt":
+                self._corrupt_left[e.chunk] = \
+                    self._corrupt_left.get(e.chunk, 0) + e.count
+        self._bound = False
+
+    # -- run binding (runner calls once, before its chunk loop) ------------
+
+    def bind(self, n_chunks: int, mesh, reps: int,
+             slots: Optional[int] = None) -> None:
+        """Precompute the pure per-chunk schedules (cost scale, slots) so
+        both phases of the cluster path — and any resume — see identical
+        trajectories without event replay."""
+        self.n_chunks = int(n_chunks)
+        self.base_devices = mesh.devices.size if mesh is not None else 1
+        if self.governor is not None and self.governor.base_devices:
+            # logical capacity override: price losses against the cluster
+            # size the plan models, not the (possibly 1-device) host
+            self.base_devices = int(self.governor.base_devices)
+        self._reps = int(reps)
+        if self.governor is not None:
+            self.cost_scales = self.governor.schedule(
+                self.plan, n_chunks, self.base_devices)
+        else:
+            self.cost_scales = np.ones((max(n_chunks, 1),), np.float64)
+        # slot-pool trajectory: signed deltas compound from their chunk on
+        sl = np.full((max(n_chunks, 1),), -1, np.int64)
+        if slots is not None:
+            cur = int(slots)
+            for ci in range(n_chunks):
+                for e in self.plan.at(ci, "slot_change"):
+                    cur = max(1, cur + int(e.count))
+                sl[ci] = cur
+        self.slots_schedule = sl
+        self._bound = True
+
+    def cost_scale(self, ci: int) -> float:
+        return float(self.cost_scales[ci]) if self._bound else 1.0
+
+    def slots_at(self, ci: int, default: Optional[int]) -> Optional[int]:
+        if not self._bound or self.slots_schedule[ci] < 0:
+            return default
+        return int(self.slots_schedule[ci])
+
+    # -- chunk boundary hooks ----------------------------------------------
+
+    def begin_chunk(self, ci: int, mesh, reps: int):
+        """Apply this boundary's device-loss events; returns the (possibly
+        shrunken, possibly None = single-device) mesh to run chunk ci on."""
+        events = self.plan.at(ci, "device_loss")
+        if not events:
+            return mesh
+        from ..fleet.mesh import shrink_fleet_mesh
+        for e in events:
+            if mesh is None or mesh.devices.size <= 1:
+                # nothing to shrink on a single-device run: the event is
+                # recorded (the plan stays portable across hosts) and the
+                # governor still re-prices — capacity loss is real even
+                # when the simulation mesh cannot express it
+                self._record(ci, "device_loss",
+                             "ignored: single-device run")
+                continue
+            if e.device_ids:
+                failed = tuple(e.device_ids)
+            else:
+                # deterministic default: the trailing `count` devices of
+                # the CURRENT grid fail (explicit ids express any other
+                # pattern, incl. non-contiguous loss)
+                flat = list(mesh.devices.reshape(-1))
+                failed = tuple(d.id for d in flat[-e.count:])
+            mesh = shrink_fleet_mesh(mesh, failed, reps=reps)
+            alive = mesh.devices.size if mesh is not None else 1
+            self._record(ci, "device_loss",
+                         f"failed={list(failed)} alive={alive}")
+            with obs_trace.span("chaos.device_loss", chunk=ci,
+                                failed=list(failed), alive=alive,
+                                cost_scale=self.cost_scale(ci)):
+                if self.governor is not None:
+                    self.governor.on_capacity(ci, alive, self.base_devices,
+                                              self.cost_scale(ci))
+        return mesh
+
+    def execute(self, ci: int, thunk):
+        """Run one chunk's compiled execution under injection + retry.
+
+        thunk() must be idempotent and deterministic (the fleet cores are:
+        pure jit functions of (key, global coordinates)), so a retry after
+        an injected failure or detected corruption reproduces the clean
+        result bit-for-bit.
+        """
+        attempt = 0
+        while True:
+            try:
+                if self._fail_left.get(ci, 0) > 0:
+                    self._fail_left[ci] -= 1
+                    raise InjectedChunkFailure(
+                        f"injected failure of chunk {ci}")
+                out = thunk()
+                if self._corrupt_left.get(ci, 0) > 0:
+                    self._corrupt_left[ci] -= 1
+                    rng = np.random.Generator(np.random.PCG64(
+                        (self.plan.seed, ci, attempt)))
+                    out = _poison(out, rng)
+                    self._record(ci, "corrupt", f"attempt={attempt}")
+                # integrity check: the simulator's metric payloads are
+                # NaN-free by construction, so any NaN means the payload
+                # was corrupted in flight -> re-execute
+                if _has_nan(out):
+                    raise ChunkCorruptionDetected(
+                        f"NaN metrics payload in chunk {ci}")
+                return out
+            except (InjectedChunkFailure, ChunkCorruptionDetected) as err:
+                attempt += 1
+                if attempt >= self.max_attempts:
+                    raise ChaosExhausted(
+                        f"chunk {ci} failed {attempt} attempts; last: "
+                        f"{err}") from err
+                backoff = self.backoff_base * (2.0 ** (attempt - 1))
+                self._record(ci, "retry",
+                             f"attempt={attempt} backoff={backoff:.3f}s "
+                             f"cause={type(err).__name__}")
+                with obs_trace.span("chaos.retry", chunk=ci,
+                                    attempt=attempt, backoff_s=backoff,
+                                    cause=type(err).__name__):
+                    if backoff > 0:
+                        self._sleep(backoff)
+
+    def maybe_crash(self, ci: int) -> None:
+        """Raise SimulatedCrash if the plan kills the process after chunk
+        ci (the runner calls this AFTER the chunk's checkpoint commits)."""
+        if self.plan.at(ci, "crash"):
+            self._record(ci, "crash", "simulated process death")
+            raise SimulatedCrash(ci)
+
+    def mesh_through(self, start_chunk: int, mesh, reps: int):
+        """Silently replay the device-loss shrinks of chunks
+        [0, start_chunk) — how a resumed run reconstructs the mesh it
+        crashed on without re-firing governor hooks or audit records
+        (mesh state is never checkpointed; it is pure in the plan)."""
+        from ..fleet.mesh import shrink_fleet_mesh
+        for ci in range(start_chunk):
+            for e in self.plan.at(ci, "device_loss"):
+                if mesh is None or mesh.devices.size <= 1:
+                    continue
+                if e.device_ids:
+                    failed = tuple(e.device_ids)
+                else:
+                    flat = list(mesh.devices.reshape(-1))
+                    failed = tuple(d.id for d in flat[-e.count:])
+                mesh = shrink_fleet_mesh(mesh, failed, reps=reps)
+        return mesh
+
+    # -- resume + reporting ------------------------------------------------
+
+    def catch_up(self, start_chunk: int) -> None:
+        """Fast-forward the injection state over already-completed chunks
+        (schedules are pure, so only the countdown budgets and the audit
+        log need advancing)."""
+        for ci in range(start_chunk):
+            self._fail_left.pop(ci, None)
+            self._corrupt_left.pop(ci, None)
+        self._record(start_chunk, "resume",
+                     f"resumed at chunk {start_chunk}")
+
+    def _record(self, chunk: int, kind: str, detail: str) -> None:
+        self.records.append((int(chunk), kind, detail))
+
+    def report(self) -> str:
+        """Human-readable audit log of everything the context did."""
+        if not self.records:
+            return "chaos: no events fired"
+        lines = [f"chaos: {len(self.records)} event(s) "
+                 f"[plan: {self.plan.fingerprint()}]"]
+        lines += [f"  chunk {c:>3d}  {k:<12s} {d}"
+                  for c, k, d in self.records]
+        return "\n".join(lines)
+
+
+def as_context(chaos) -> Optional[ChaosContext]:
+    """Normalize the runners' `chaos=` argument: None | FaultPlan |
+    ChaosContext (a bare plan gets default context settings)."""
+    if chaos is None:
+        return None
+    if isinstance(chaos, ChaosContext):
+        return chaos
+    if isinstance(chaos, FaultPlan):
+        return ChaosContext(chaos)
+    raise TypeError(f"chaos must be a FaultPlan or ChaosContext, "
+                    f"got {type(chaos).__name__}")

@@ -1,0 +1,203 @@
+"""Chunk-boundary checkpoint/resume for fleet runs.
+
+The resume state of a chunked fleet run is small and host-resident: the
+`StreamCombiner` columns (a few bytes per completed job), the per-chunk
+solve outputs (r*, theory curves), and the index of the next chunk.
+Everything else — draws, blocks, the mesh itself — is recomputable from
+(key, global chunk index) by the fleet key-derivation contract, which is
+what makes `resume_fleet()` bit-identical to the uninterrupted run.
+
+Storage rides on `repro.ckpt`: atomic step dirs, torn-write-proof
+`latest_step`, `AsyncCheckpointer` so the save runs off the dispatch
+path, `gc_old` for bounded retention. The payload is self-describing — a
+uint8-JSON header leaf naming the field order plus one numpy leaf per
+field — restored through `ckpt.load_leaves`, so a FRESH process (no
+like_tree, no prior state) can resume.
+
+The header also carries a run fingerprint (strategy, trace size, chunking,
+key bytes, fault-plan fingerprint, ...): resume refuses to continue a
+checkpoint under a different configuration, where "continuing" would
+silently splice two different runs together.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+from pathlib import Path
+from typing import Optional, Union
+
+import numpy as np
+
+from .. import ckpt
+from ..sim.metrics import StreamCombiner
+
+_VERSION = 1
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    """Where and how often a fleet run checkpoints its chunk state.
+
+    every:     checkpoint after every `every`-th chunk (the final chunk
+               and any chunk a crash event follows always checkpoint).
+    keep:      bounded retention — `ckpt.gc_old` keeps this many steps.
+    use_async: write on `ckpt.AsyncCheckpointer`'s worker thread so the
+               dispatch path never blocks on IO (a crash boundary still
+               waits, so SimulatedCrash never outruns its own commit).
+    """
+    directory: Union[str, Path]
+    every: int = 1
+    keep: int = 3
+    use_async: bool = True
+
+    def sub(self, name: str) -> "CheckpointConfig":
+        """Per-strategy subdirectory (run_all_fleet gives each strategy
+        its own checkpoint stream)."""
+        return replace(self, directory=Path(self.directory) / name)
+
+
+def as_checkpoint(obj) -> Optional[CheckpointConfig]:
+    """Normalize the runners' `checkpoint=` argument: None | path |
+    CheckpointConfig."""
+    if obj is None or isinstance(obj, CheckpointConfig):
+        return obj
+    if isinstance(obj, (str, Path)):
+        return CheckpointConfig(directory=obj)
+    raise TypeError(f"checkpoint must be a path or CheckpointConfig, "
+                    f"got {type(obj).__name__}")
+
+
+class ChunkCheckpointer:
+    """Thin facade over repro.ckpt for the chunk loops: async or sync
+    save + gc, committed-step discovery, structure-free load."""
+
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self._async = (ckpt.AsyncCheckpointer(cfg.directory, keep=cfg.keep)
+                       if cfg.use_async else None)
+
+    def save(self, step: int, leaves: list) -> None:
+        if self._async is not None:
+            self._async.save(step, leaves)
+        else:
+            ckpt.save(self.cfg.directory, step, leaves)
+            ckpt.gc_old(self.cfg.directory, keep=self.cfg.keep)
+
+    def wait(self) -> None:
+        if self._async is not None:
+            self._async.wait()
+
+    def latest(self) -> Optional[int]:
+        return ckpt.latest_step(self.cfg.directory)
+
+    def load(self, step: int) -> list:
+        return ckpt.load_leaves(self.cfg.directory, step)
+
+
+# ---------------------------------------------------------------------------
+# State packing: {name: array} dict <-> self-describing leaf list
+# ---------------------------------------------------------------------------
+
+
+def pack_state(arrays: dict, *, next_chunk: int, fingerprint: dict) -> list:
+    """[uint8-JSON header, *numpy leaves] — the header names the field
+    order, so load needs no like_tree."""
+    header = {"version": _VERSION, "next_chunk": int(next_chunk),
+              "fingerprint": fingerprint, "fields": list(arrays)}
+    blob = np.frombuffer(
+        json.dumps(header, sort_keys=True).encode("utf-8"), np.uint8)
+    return [blob] + [np.asarray(arrays[k]) for k in arrays]
+
+
+def unpack_state(leaves: list):
+    """(header dict, {name: array}) from a pack_state leaf list."""
+    header = json.loads(np.asarray(leaves[0]).tobytes().decode("utf-8"))
+    if header.get("version") != _VERSION:
+        raise ValueError(f"unsupported checkpoint version "
+                         f"{header.get('version')!r}")
+    fields = header["fields"]
+    if len(leaves) != len(fields) + 1:
+        raise ValueError(f"checkpoint names {len(fields)} fields but "
+                         f"carries {len(leaves) - 1} leaves")
+    return header, dict(zip(fields, leaves[1:]))
+
+
+def pack_run_state(acc: StreamCombiner, solves, *, next_chunk: int,
+                   fingerprint: dict) -> list:
+    """Full chunk-loop state: combiner columns + per-chunk solve outputs
+    (concatenated; the combiner weights restore the chunk boundaries)."""
+    arrays = {f"acc_{k}": v for k, v in acc.state_dict().items()}
+    r_parts, thp_parts, thc_parts = solves
+    arrays["r_opt"] = np.concatenate(r_parts)
+    arrays["th_p"] = np.concatenate(thp_parts)
+    arrays["th_c"] = np.concatenate(thc_parts)
+    return pack_state(arrays, next_chunk=next_chunk,
+                      fingerprint=fingerprint)
+
+
+def unpack_run_state(leaves: list):
+    """(header, StreamCombiner, (r_parts, thp_parts, thc_parts))."""
+    header, arrays = unpack_state(leaves)
+    acc = StreamCombiner.from_state(
+        {k[len("acc_"):]: v for k, v in arrays.items()
+         if k.startswith("acc_")})
+    w = np.asarray(arrays["acc_weights"], np.float64)
+    splits = np.cumsum(w.astype(np.int64))[:-1]
+    solves = tuple(list(np.split(np.asarray(arrays[k]), splits))
+                   for k in ("r_opt", "th_p", "th_c"))
+    return header, acc, solves
+
+
+def check_fingerprint(stored: dict, current: dict) -> None:
+    """Refuse to resume a checkpoint written under a different run
+    configuration (different strategy, trace, chunking, key, or fault
+    plan) — splicing two runs would be silent corruption."""
+    if stored == current:
+        return
+    diffs = sorted(k for k in set(stored) | set(current)
+                   if stored.get(k) != current.get(k))
+    raise ValueError(
+        "checkpoint fingerprint mismatch — refusing to resume under a "
+        "different run configuration; differing fields: "
+        + ", ".join(f"{k}: stored={stored.get(k)!r} != "
+                    f"current={current.get(k)!r}" for k in diffs))
+
+
+def run_fingerprint(**kw) -> dict:
+    """JSON-safe fingerprint dict from the runner's configuration (numpy
+    scalars and key arrays become primitives/hex)."""
+    out = {}
+    for k, v in kw.items():
+        if v is None or isinstance(v, (bool, int, float, str)):
+            out[k] = v
+        else:
+            a = np.asarray(v)
+            out[k] = (a.item() if a.ndim == 0 else a.tobytes().hex())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Resume entry points (fresh-process friendly)
+# ---------------------------------------------------------------------------
+
+
+def resume_fleet(key, jobs, strategy, p, *, checkpoint, chaos=None, **kw):
+    """Finish an interrupted `run_fleet_strategy` from its latest
+    committed checkpoint — bit-identical to the uninterrupted run.
+
+    Call with the SAME arguments as the original run (the fingerprint
+    check enforces the ones that matter) plus the same `checkpoint`
+    config; a fresh process needs nothing else.
+    """
+    from ..fleet.runner import run_fleet_strategy
+    return run_fleet_strategy(key, jobs, strategy, p, chaos=chaos,
+                              checkpoint=checkpoint, resume=True, **kw)
+
+
+def resume_cluster_fleet(key, jobs, strategy, p, *, checkpoint, chaos=None,
+                         **kw):
+    """Finite-capacity twin of `resume_fleet` (window-boundary resume)."""
+    from ..fleet.cluster import run_cluster_fleet_strategy
+    return run_cluster_fleet_strategy(key, jobs, strategy, p, chaos=chaos,
+                                      checkpoint=checkpoint, resume=True,
+                                      **kw)

@@ -1,3 +1,4 @@
 """Fault-tolerant checkpointing (atomic, sharded, async)."""
 from . import checkpoint
-from .checkpoint import save, restore, latest_step, AsyncCheckpointer
+from .checkpoint import (AsyncCheckpointer, gc_old, latest_step,
+                         load_leaves, restore, save)

@@ -67,14 +67,74 @@ def save(directory, step: int, tree) -> Path:
     return final
 
 
+def _step_of(path: Path) -> Optional[int]:
+    """Parse a committed step dir name; None for anything else (torn .tmp
+    dirs, stray files, malformed names)."""
+    if not path.is_dir() or not path.name.startswith("step_") \
+            or path.name.endswith(".tmp"):
+        return None
+    try:
+        step = int(path.name.split("_", 1)[1])
+    except ValueError:
+        return None
+    # only canonical names: restore() addresses dirs as step_{n:08d}, so a
+    # non-canonical "step_5" must not be reported as loadable
+    return step if path.name == f"step_{step:08d}" else None
+
+
+def _is_committed(path: Path) -> bool:
+    """A checkpoint dir is loadable iff its manifest parses AND every leaf
+    file it names exists. The atomic-rename commit makes this the normal
+    case; the checks guard against a dir assembled by hand or a filesystem
+    that lost files after the rename — resume must never pick a torn
+    checkpoint."""
+    try:
+        meta = json.loads((path / "manifest.json").read_text())
+    except (OSError, ValueError):
+        return False
+    n = meta.get("n_leaves")
+    if not isinstance(n, int) or n < 0:
+        return False
+    return all((path / f"{i}.npy").exists() for i in range(n))
+
+
 def latest_step(directory) -> Optional[int]:
+    """Largest *committed* step in `directory` (None when there is none).
+
+    Robust to an empty or missing dir, torn `.tmp` writes from a killed
+    process, non-checkpoint entries, malformed `step_*` names, and a
+    manifest whose leaf files are missing — candidates are verified
+    newest-first and the first fully committed one wins, so a resume can
+    never land on a partially-written checkpoint.
+    """
     directory = Path(directory)
     if not directory.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
-             if p.is_dir() and p.name.startswith("step_")
-             and not p.name.endswith(".tmp") and (p / "manifest.json").exists()]
-    return max(steps) if steps else None
+    cands = sorted(((s, p) for p in directory.iterdir()
+                    if (s := _step_of(p)) is not None), reverse=True)
+    for step, path in cands:
+        if _is_committed(path):
+            return step
+    return None
+
+
+def load_leaves(directory, step: int) -> list:
+    """Load a checkpoint's leaves in index order WITHOUT a like_tree.
+
+    For callers whose state is self-describing (e.g. the chaos recovery
+    layer packs a header leaf naming the rest), so a fresh process can
+    restore before it knows the payload's structure.
+    """
+    directory = Path(directory) / f"step_{step:08d}"
+    meta = json.loads((directory / "manifest.json").read_text())
+    out = []
+    for i in range(meta["n_leaves"]):
+        arr = np.load(directory / f"{i}.npy")
+        want = _dtype_of(meta["leaves"][i]["dtype"])
+        if arr.dtype != want:
+            arr = arr.view(want)
+        out.append(arr)
+    return out
 
 
 def restore(directory, step: int, like_tree, shardings=None):

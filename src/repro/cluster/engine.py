@@ -411,7 +411,8 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
                 governor: Optional[GovernorConfig] = None,
                 admission: Optional[AdmissionConfig] = None,
                 reps: int = 1, devices=None, mesh=None, chunk_jobs=None,
-                collect_metrics: bool = False):
+                collect_metrics: bool = False, chaos=None, checkpoint=None,
+                resume: bool = False):
     """Finite-capacity mirror of `sim.runner.run_all`.
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
@@ -427,8 +428,13 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
     mesh, and chunked traces replay window-by-window on independent slot
     pools. Without them this single-device path is byte-for-byte the
     historical one. See DESIGN.md §14.
+
+    `chaos=` (a `repro.chaos.FaultPlan`) / `checkpoint=` / `resume=` run
+    under fault injection with window-boundary checkpoint/resume — fleet
+    layer only (implied by any of them). See DESIGN.md §16.
     """
-    if devices is not None or mesh is not None or chunk_jobs is not None:
+    if (devices is not None or mesh is not None or chunk_jobs is not None
+            or chaos is not None or checkpoint is not None):
         from ..fleet import fleet_mesh, run_cluster_fleet
         if mesh is None and devices is not None and int(devices) > 1:
             mesh = fleet_mesh(devices=devices, reps=reps)
@@ -437,7 +443,8 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
             r_min_from_ns=r_min_from_ns, max_r=max_r, oracle=oracle,
             discipline=discipline, passes=passes, governor=governor,
             admission=admission, reps=reps, mesh=mesh,
-            chunk_jobs=chunk_jobs, collect_metrics=collect_metrics)
+            chunk_jobs=chunk_jobs, collect_metrics=collect_metrics,
+            chaos=chaos, checkpoint=checkpoint, resume=resume)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)

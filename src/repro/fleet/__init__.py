@@ -23,7 +23,7 @@ legacy single-device paths are untouched. See DESIGN.md §14.
 """
 from .blocks import FleetBlocks, block_jobset, gather_index, make_blocks
 from .cluster import run_cluster_fleet, run_cluster_fleet_strategy
-from .mesh import AXES, fleet_mesh, mesh_extents, pad_count
+from .mesh import AXES, fleet_mesh, mesh_extents, pad_count, shrink_fleet_mesh
 from .runner import job_columns, run_all_fleet, run_fleet_strategy
 
 __all__ = [
@@ -40,4 +40,5 @@ __all__ = [
     "run_cluster_fleet",
     "run_cluster_fleet_strategy",
     "run_fleet_strategy",
+    "shrink_fleet_mesh",
 ]

@@ -139,14 +139,17 @@ def _rep_mean(tree, reps: int):
 
 
 def _solve_chunk(cjobs, strategy, p, theta, r_min, max_r, slots,
-                 governor):
+                 governor, cost_scale: float = 1.0):
     """(r_j, choice_j, th_p, th_c) for one chunk — mirrors the legacy
-    `run_cluster_strategy` preamble exactly."""
+    `run_cluster_strategy` preamble exactly (cost_scale != 1 is the
+    elastic governor's capacity re-pricing of this window's solve)."""
     J = cjobs.n_jobs
     if not get(strategy).optimized:
         zeros = jnp.zeros((J,), jnp.int32)
         return zeros, zeros, jnp.zeros((J,)), jnp.zeros((J,))
     specs = jobspecs_of(cjobs, p, jnp.float32(theta), jnp.float32(r_min))
+    if cost_scale != 1.0:
+        specs = specs._replace(C=specs.C * jnp.float32(cost_scale))
     if governor is not None and slots is not None:
         specs = apply_governor(specs, cjobs, slots, governor)
     r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
@@ -164,14 +167,20 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                                reps: int = 1, width="auto",
                                chunk_jobs=None,
                                pad_to: Optional[int] = None,
-                               collect_metrics: bool = False
-                               ) -> ClusterOutput:
+                               collect_metrics: bool = False,
+                               chaos=None, checkpoint=None,
+                               resume: bool = False) -> ClusterOutput:
     """Fleet mirror of `cluster.engine.run_cluster_strategy`.
 
     Replications shard over every device of `mesh` (pad+mask to the
     device count); `chunk_jobs` streams job-contiguous windows through
     independent slot pools. `pad_to` (int) overrides the replication
     padding multiple for the pad+mask tests (mesh=None only).
+    chaos / checkpoint / resume: as in `runner.run_fleet_strategy`, at
+    window granularity — device loss shrinks the rep mesh, slot_change
+    events move each window's slot pool, the elastic governor re-prices
+    each window's solve, and windows resume from the latest committed
+    checkpoint bit-identically.
     """
     if passes < 2:
         raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
@@ -182,33 +191,58 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     if pad_to is not None and mesh is not None:
         raise ValueError("pad_to is a test-only override; incompatible "
                          "with an explicit mesh")
+    if resume and checkpoint is None:
+        raise ValueError("resume=True requires a checkpoint config")
     if not get(strategy).detectable:
         oracle = True
-    rep_mult = (pad_to if pad_to is not None
-                else (mesh.devices.size if mesh is not None else 1))
-    reps_pad = pad_count(reps, rep_mult)
-    rep_ids = jnp.arange(reps_pad, dtype=jnp.int32)
+
+    def layout_of(m):
+        rep_mult = (pad_to if pad_to is not None
+                    else (m.devices.size if m is not None else 1))
+        return jnp.arange(pad_count(reps, rep_mult), dtype=jnp.int32)
+
+    rep_ids = layout_of(mesh)
 
     cols = job_columns(jobs)
     J = int(cols[0].shape[0])
     chunk = J if chunk_jobs is None else max(1, int(chunk_jobs))
     n_chunks = -(-J // chunk)
 
+    ctx = saver = cfg = fp = None
+    start_chunk = 0
+    if chaos is not None:
+        from ..chaos.inject import as_context
+        ctx = as_context(chaos)
+        ctx.bind(n_chunks, mesh, reps, slots=slots)
+    if checkpoint is not None:
+        from ..chaos import recovery
+        cfg = recovery.as_checkpoint(checkpoint)
+        saver = recovery.ChunkCheckpointer(cfg)
+        fp = recovery.run_fingerprint(
+            path="cluster", strategy=strategy, n_jobs=J, chunk=chunk,
+            reps=reps, max_r=max_r, oracle=oracle, theta=float(theta),
+            r_min=float(r_min), slots=slots, discipline=discipline,
+            passes=passes, key=np.asarray(key),
+            plan=ctx.plan.fingerprint() if ctx is not None else "")
+
     # phase 1 — solve every window first, so width="auto" resolves to ONE
     # static value (max over windows): per-window widths would recompile
     # the replay per chunk, and a narrower-than-global width would be
     # unsound for windows with a larger solved r*. Only the per-job solve
     # outputs are kept; window JobSets (the task-axis memory) are rebuilt
-    # one at a time in phase 2.
+    # one at a time in phase 2. The solves are deterministic, so a resume
+    # re-runs this phase rather than checkpointing it.
     bounds, solves = [], []
     with obs_trace.span("fleet.cluster.solve", strategy=strategy,
                         n_jobs=J, n_chunks=n_chunks):
         for ci in range(n_chunks):
             lo, hi = ci * chunk, min((ci + 1) * chunk, J)
             bounds.append((lo, hi))
+            slots_ci = ctx.slots_at(ci, slots) if ctx is not None else slots
+            scale_ci = ctx.cost_scale(ci) if ctx is not None else 1.0
             solves.append(_solve_chunk(chunk_jobset(cols, lo, hi), strategy,
-                                       p, theta, r_min, max_r, slots,
-                                       governor))
+                                       p, theta, r_min, max_r, slots_ci,
+                                       governor, cost_scale=scale_ci))
     if width == "auto":
         width = (int(max(int(jnp.max(s[0])) for s in solves)) + 2
                  if get(strategy).optimized else None)
@@ -216,42 +250,87 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     # phase 2 — replay each window on its own slot pool
     acc = StreamCombiner()
     r_parts, thp_parts, thc_parts = [], [], []
-    for (lo, hi), (r_j, choice_j, th_p, th_c) in zip(bounds, solves):
-        cjobs = chunk_jobset(cols, lo, hi)
-        admitted = None
-        if admission is not None and slots is not None:
-            admitted = jnp.asarray(admit_jobs(cjobs, slots, admission))
-        out = obs_trace.fenced(
-            f"fleet.cluster.replay[{strategy}]", _cluster_fleet_core,
-            key, rep_ids, jobset_arrays(cjobs), r_j, choice_j, admitted,
-            n_jobs=cjobs.n_jobs, strategy=strategy, p=p, slots=slots,
-            discipline=discipline, passes=passes, max_r=max_r,
-            oracle=oracle, width=width, mesh=mesh,
-            collect_metrics=collect_metrics)
-        with obs_trace.span("fleet.cluster.reduce", window=len(r_parts)):
-            if collect_metrics:
-                res, q, rep_metrics = out
-                # pad+mask rep drop + fixed-order reduction, host-side —
-                # mesh topology cannot perturb the combined pytree
-                window_metrics = reduce_reps_host(rep_metrics, reps)
-            else:
-                res, q = out
-                window_metrics = None
-            res, q = _rep_mean((res, q), reps)
-            mean_wait, max_wait, util, preempted = q
-            admitted_frac = (1.0 if admitted is None
-                             else float(np.mean(np.asarray(admitted))))
-            queue = QueueMetrics(
-                mean_wait=jnp.float32(mean_wait),
-                max_wait=jnp.float32(max_wait),
-                utilization=jnp.float32(util),
-                preempted=jnp.float32(preempted),
-                admitted_frac=jnp.float32(admitted_frac), slots=slots)
-            acc.add(res, n_jobs=cjobs.n_jobs, queue=queue,
-                    capacity=window_metrics)
-            r_parts.append(np.asarray(r_j))
-            thp_parts.append(np.asarray(th_p))
-            thc_parts.append(np.asarray(th_c))
+    if resume:
+        step = saver.latest()
+        if step is not None:
+            header, acc, (r_parts, thp_parts, thc_parts) = \
+                recovery.unpack_run_state(saver.load(step))
+            recovery.check_fingerprint(header["fingerprint"], fp)
+            start_chunk = int(header["next_chunk"])
+            if ctx is not None:
+                mesh = ctx.mesh_through(start_chunk, mesh, reps)
+                rep_ids = layout_of(mesh)
+                ctx.catch_up(start_chunk)
+
+    try:
+        for ci in range(start_chunk, n_chunks):
+            if ctx is not None:
+                new_mesh = ctx.begin_chunk(ci, mesh, reps)
+                if new_mesh is not mesh:
+                    mesh = new_mesh
+                    rep_ids = layout_of(mesh)
+            (lo, hi), (r_j, choice_j, th_p, th_c) = bounds[ci], solves[ci]
+            slots_w = ctx.slots_at(ci, slots) if ctx is not None else slots
+            cjobs = chunk_jobset(cols, lo, hi)
+            admitted = None
+            if admission is not None and slots_w is not None:
+                admitted = jnp.asarray(admit_jobs(cjobs, slots_w,
+                                                  admission))
+
+            def exec_window(rep_ids=rep_ids, cjobs=cjobs, r_j=r_j,
+                            choice_j=choice_j, admitted=admitted,
+                            slots_w=slots_w, mesh=mesh):
+                return obs_trace.fenced(
+                    f"fleet.cluster.replay[{strategy}]",
+                    _cluster_fleet_core,
+                    key, rep_ids, jobset_arrays(cjobs), r_j, choice_j,
+                    admitted, n_jobs=cjobs.n_jobs, strategy=strategy, p=p,
+                    slots=slots_w, discipline=discipline, passes=passes,
+                    max_r=max_r, oracle=oracle, width=width, mesh=mesh,
+                    collect_metrics=collect_metrics)
+
+            out = exec_window() if ctx is None else ctx.execute(
+                ci, exec_window)
+            with obs_trace.span("fleet.cluster.reduce", window=ci):
+                if collect_metrics:
+                    res, q, rep_metrics = out
+                    # pad+mask rep drop + fixed-order reduction, host-side
+                    # — mesh topology cannot perturb the combined pytree
+                    window_metrics = reduce_reps_host(rep_metrics, reps)
+                else:
+                    res, q = out
+                    window_metrics = None
+                res, q = _rep_mean((res, q), reps)
+                mean_wait, max_wait, util, preempted = q
+                admitted_frac = (1.0 if admitted is None
+                                 else float(np.mean(np.asarray(admitted))))
+                queue = QueueMetrics(
+                    mean_wait=jnp.float32(mean_wait),
+                    max_wait=jnp.float32(max_wait),
+                    utilization=jnp.float32(util),
+                    preempted=jnp.float32(preempted),
+                    admitted_frac=jnp.float32(admitted_frac),
+                    slots=slots_w)
+                acc.add(res, n_jobs=cjobs.n_jobs, queue=queue,
+                        capacity=window_metrics)
+                r_parts.append(np.asarray(r_j))
+                thp_parts.append(np.asarray(th_p))
+                thc_parts.append(np.asarray(th_c))
+            if saver is not None:
+                crash_here = (ctx is not None
+                              and bool(ctx.plan.at(ci, "crash")))
+                if ((ci + 1) % cfg.every == 0 or ci == n_chunks - 1
+                        or crash_here):
+                    saver.save(ci + 1, recovery.pack_run_state(
+                        acc, (r_parts, thp_parts, thc_parts),
+                        next_chunk=ci + 1, fingerprint=fp))
+                    if crash_here:
+                        saver.wait()
+            if ctx is not None:
+                ctx.maybe_crash(ci)
+    finally:
+        if saver is not None:
+            saver.wait()
 
     result = acc.finalize()
     queue = acc.finalize_queue()
@@ -272,10 +351,22 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
                       governor: Optional[GovernorConfig] = None,
                       admission: Optional[AdmissionConfig] = None,
                       reps: int = 1, mesh=None, chunk_jobs=None,
-                      collect_metrics: bool = False):
-    """Fleet mirror of `cluster.engine.run_cluster` (same r_min protocol)."""
+                      collect_metrics: bool = False, chaos=None,
+                      checkpoint=None, resume: bool = False):
+    """Fleet mirror of `cluster.engine.run_cluster` (same r_min protocol).
+
+    chaos / checkpoint follow `runner.run_all_fleet`: one FaultPlan shared
+    by every strategy (each gets a fresh ChaosContext), per-strategy
+    checkpoint subdirectories. A scenario name's declared fault schedule
+    becomes the default plan when `chaos` is None.
+    """
     if isinstance(jobs, str):
-        from ..workloads.registry import make_trace
+        from ..workloads.registry import get_scenario, make_trace
+        if chaos is None:
+            faults = getattr(get_scenario(jobs), "faults", None)
+            if faults:
+                from ..chaos.plan import from_faults
+                chaos = from_faults(faults)
         jobs = make_trace(jobs)
     if strategies is None:
         strategies = names()
@@ -284,16 +375,34 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
               oracle=oracle, discipline=discipline, passes=passes,
               governor=governor, admission=admission, reps=reps,
               chunk_jobs=chunk_jobs, collect_metrics=collect_metrics)
+
+    def kw_of(name):
+        per = dict(kw)
+        if chaos is not None:
+            from ..chaos.inject import ChaosContext
+            from ..chaos.plan import FaultPlan
+            if not isinstance(chaos, FaultPlan):
+                raise TypeError("run_cluster_fleet takes a FaultPlan "
+                                "(each strategy needs its own "
+                                "ChaosContext)")
+            per["chaos"] = ChaosContext(chaos)
+        if checkpoint is not None:
+            from ..chaos.recovery import as_checkpoint
+            per["checkpoint"] = as_checkpoint(checkpoint).sub(name)
+            per["resume"] = resume
+        return per
+
     outs = {}
     r_min = 0.0
     if "hadoop_ns" in strategies:
         outs["hadoop_ns"] = run_cluster_fleet_strategy(
-            key_of["hadoop_ns"], jobs, "hadoop_ns", p, r_min=0.0, **kw)
+            key_of["hadoop_ns"], jobs, "hadoop_ns", p, r_min=0.0,
+            **kw_of("hadoop_ns"))
         if r_min_from_ns:
             r_min = float(outs["hadoop_ns"].result.pocd) - 1e-3
     for name in strategies:
         if name == "hadoop_ns":
             continue
         outs[name] = run_cluster_fleet_strategy(key_of[name], jobs, name, p,
-                                                r_min=r_min, **kw)
+                                                r_min=r_min, **kw_of(name))
     return outs, r_min

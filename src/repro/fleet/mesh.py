@@ -54,6 +54,36 @@ def fleet_mesh(devices: Optional[int] = None,
     return Mesh(np.asarray(devs[:n]).reshape(r_ext, j_ext), AXES)
 
 
+def shrink_fleet_mesh(mesh: Mesh, failed, reps: int = 1) -> Optional[Mesh]:
+    """Re-factorize a ("rep", "job") fleet mesh over surviving devices.
+
+    failed: the failed devices (jax Devices or int ids) — they may sit
+        anywhere in the grid; the survivors keep their order and refactor
+        through the same gcd rule as `fleet_mesh`, so the result is what
+        `fleet_mesh` would have built from the surviving device list.
+    Returns None when a single device survives (the runner's no-mesh fast
+    path — same computation, no partitioning). Raises when nothing
+    survives: that is a cluster outage, not an elastic event.
+
+    Metrics are unaffected by construction: every (rep, block) cell is
+    keyed by its global coordinates (runner.py's key-derivation contract),
+    so replaying the remaining chunks on the shrunken mesh is bit-identical
+    to never having lost the devices.
+    """
+    from ..runtime.elastic import device_id
+    failed_ids = {device_id(d) for d in failed}
+    alive = [d for d in mesh.devices.reshape(-1)
+             if device_id(d) not in failed_ids]
+    if not alive:
+        raise RuntimeError("no devices survive the loss — cannot reshard")
+    if len(alive) == mesh.devices.size:
+        return mesh
+    if len(alive) == 1:
+        return None
+    r_ext = math.gcd(len(alive), max(int(reps), 1))
+    return Mesh(np.asarray(alive).reshape(r_ext, len(alive) // r_ext), AXES)
+
+
 def mesh_extents(mesh: Optional[Mesh]) -> Tuple[int, int]:
     """(rep_extent, job_extent) of a fleet mesh; (1, 1) when mesh is None."""
     if mesh is None:

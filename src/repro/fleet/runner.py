@@ -176,7 +176,8 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                        theta=1e-4, r_min=0.0, max_r: int = 8,
                        oracle: bool = True, reps: int = 1,
                        block_jobs: int = 64, chunk_jobs=None,
-                       pad_to=None) -> RunOutput:
+                       pad_to=None, chaos=None, checkpoint=None,
+                       resume: bool = False) -> RunOutput:
     """Fleet mirror of `sim.runner.run_strategy`.
 
     jobs: a JobSet or a WorkloadTrace (traces are chunked column-wise, so
@@ -192,6 +193,15 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         property tests; only valid without a mesh.
     block_jobs: jobs per shardable block (the key-derivation granularity —
         changing it changes the draws, so keep it fixed when comparing).
+    chaos: a `chaos.FaultPlan` or `chaos.ChaosContext` consulted at chunk
+        boundaries (device loss -> mesh shrink + re-pad, injected chunk
+        failures/corruption -> retry, crash -> SimulatedCrash after the
+        checkpoint commits). None keeps the exact pre-chaos code path.
+    checkpoint: a `chaos.CheckpointConfig` (or directory path) — save the
+        resumable chunk state after each chunk; with `resume=True`, first
+        restore the latest committed checkpoint and continue from it
+        (bit-identical to an uninterrupted run; the stored fingerprint
+        must match this call's configuration).
     """
     spec = get(strategy)
     if not spec.detectable:
@@ -199,6 +209,8 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     if pad_to is not None and mesh is not None:
         raise ValueError("pad_to is a test-only override; incompatible "
                          "with an explicit mesh")
+    if resume and checkpoint is None:
+        raise ValueError("resume=True requires a checkpoint config")
     cols = job_columns(jobs)
     J = int(cols[0].shape[0])
     B = max(1, min(int(block_jobs), J))
@@ -208,60 +220,128 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         # boundaries or the global block indices — and hence the draws —
         # would shift between chunked and monolithic runs)
         B = min(B, max(1, int(chunk_jobs)))
-    rep_ext, job_ext = pad_to if pad_to is not None else mesh_extents(mesh)
-
-    reps_pad = pad_count(reps, rep_ext)
-    rep_ids = jnp.arange(reps_pad, dtype=jnp.int32)
 
     chunk = J if chunk_jobs is None else max(B, (int(chunk_jobs) // B) * B)
     n_chunks = -(-J // chunk)
     blocks_per_chunk = -(-chunk // B)
-    min_blocks = pad_count(blocks_per_chunk, job_ext)
     # one global task width -> every chunk reuses one compiled program
     Tb = int(block_task_counts(cols[0], B).max())
+
+    def layout_of(m):
+        # mesh-dependent padding; re-derived when chaos shrinks the mesh
+        # (the pad+mask re-fit over the surviving extents)
+        r_ext, j_ext = pad_to if pad_to is not None else mesh_extents(m)
+        return (j_ext, jnp.arange(pad_count(reps, r_ext), dtype=jnp.int32),
+                pad_count(blocks_per_chunk, j_ext))
+
+    job_ext, rep_ids, min_blocks = layout_of(mesh)
+
+    ctx = saver = cfg = fp = None
+    start_chunk = 0
+    if chaos is not None:
+        from ..chaos.inject import as_context
+        ctx = as_context(chaos)
+        ctx.bind(n_chunks, mesh, reps)
+    if checkpoint is not None:
+        from ..chaos import recovery
+        cfg = recovery.as_checkpoint(checkpoint)
+        saver = recovery.ChunkCheckpointer(cfg)
+        fp = recovery.run_fingerprint(
+            path="flat", strategy=strategy, n_jobs=J, block_jobs=B,
+            chunk=chunk, reps=reps, max_r=max_r, oracle=oracle,
+            theta=float(theta), r_min=float(r_min), key=np.asarray(key),
+            plan=ctx.plan.fingerprint() if ctx is not None else "")
 
     theta_f = jnp.float32(theta)
     r_min_f = jnp.float32(r_min)
     acc = StreamCombiner()
     r_parts, thp_parts, thc_parts = [], [], []
-    for ci in range(n_chunks):
-        lo, hi = ci * chunk, min((ci + 1) * chunk, J)
-        cjobs = chunk_jobset(cols, lo, hi)
-        Jc = cjobs.n_jobs
-        with obs_trace.span("fleet.solve", strategy=strategy, chunk=ci,
-                            n_jobs=Jc):
-            if not spec.optimized:
-                r_j = jnp.zeros((Jc,), jnp.int32)
-                choice_j = jnp.zeros((Jc,), jnp.int32)
-                th_p = jnp.zeros((Jc,))
-                th_c = jnp.zeros((Jc,))
-            else:
-                specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
-                r_j, choice_j, _, th_p, th_c = solve_jobs_jit(
-                    strategy, specs, max_r + 1)
-                th_c = th_c * specs.C
-        with obs_trace.span("fleet.blocks", chunk=ci, block_jobs=B):
-            layout = block_layout(cjobs, B, pad_blocks_to=job_ext,
-                                  tasks_pad=Tb, min_blocks=min_blocks)
-            blocks = make_blocks(cjobs, B,
-                                 block_offset=ci * blocks_per_chunk,
-                                 layout=layout)
-            jid = np.asarray(cjobs.job_id)
-            r_b = stack_task_column(layout, np.asarray(r_j)[jid], 0,
-                                    np.int32)
-            c_b = stack_task_column(layout, np.asarray(choice_j)[jid], 0,
-                                    np.int32)
-        jc, jm = obs_trace.fenced(
-            f"fleet.exec[{strategy}]", _fleet_core,
-            key, rep_ids, blocks, r_b, c_b,
-            strategy=strategy, p=p, max_r=max_r,
-            oracle=oracle, mesh=mesh)
-        with obs_trace.span("fleet.reduce", chunk=ci, n_jobs=Jc):
-            res = _chunk_result(jc, jm, cjobs.D, cjobs.C, reps, Jc, B)
-            acc.add(res, n_jobs=Jc)
-        r_parts.append(np.asarray(r_j))
-        thp_parts.append(np.asarray(th_p))
-        thc_parts.append(np.asarray(th_c))
+    if resume:
+        step = saver.latest()
+        if step is not None:
+            header, acc, (r_parts, thp_parts, thc_parts) = \
+                recovery.unpack_run_state(saver.load(step))
+            recovery.check_fingerprint(header["fingerprint"], fp)
+            start_chunk = int(header["next_chunk"])
+            if ctx is not None:
+                mesh = ctx.mesh_through(start_chunk, mesh, reps)
+                job_ext, rep_ids, min_blocks = layout_of(mesh)
+                ctx.catch_up(start_chunk)
+
+    try:
+        for ci in range(start_chunk, n_chunks):
+            if ctx is not None:
+                new_mesh = ctx.begin_chunk(ci, mesh, reps)
+                if new_mesh is not mesh:
+                    mesh = new_mesh
+                    job_ext, rep_ids, min_blocks = layout_of(mesh)
+            lo, hi = ci * chunk, min((ci + 1) * chunk, J)
+            cjobs = chunk_jobset(cols, lo, hi)
+            Jc = cjobs.n_jobs
+            with obs_trace.span("fleet.solve", strategy=strategy, chunk=ci,
+                                n_jobs=Jc):
+                if not spec.optimized:
+                    r_j = jnp.zeros((Jc,), jnp.int32)
+                    choice_j = jnp.zeros((Jc,), jnp.int32)
+                    th_p = jnp.zeros((Jc,))
+                    th_c = jnp.zeros((Jc,))
+                else:
+                    specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
+                    scale = ctx.cost_scale(ci) if ctx is not None else 1.0
+                    if scale != 1.0:
+                        # governor re-pricing under capacity loss: chunks
+                        # not yet dispatched solve r* at the scaled cost
+                        specs = specs._replace(
+                            C=specs.C * jnp.float32(scale))
+                    r_j, choice_j, _, th_p, th_c = solve_jobs_jit(
+                        strategy, specs, max_r + 1)
+                    th_c = th_c * specs.C
+            with obs_trace.span("fleet.blocks", chunk=ci, block_jobs=B):
+                layout = block_layout(cjobs, B, pad_blocks_to=job_ext,
+                                      tasks_pad=Tb, min_blocks=min_blocks)
+                blocks = make_blocks(cjobs, B,
+                                     block_offset=ci * blocks_per_chunk,
+                                     layout=layout)
+                jid = np.asarray(cjobs.job_id)
+                r_b = stack_task_column(layout, np.asarray(r_j)[jid], 0,
+                                        np.int32)
+                c_b = stack_task_column(layout, np.asarray(choice_j)[jid],
+                                        0, np.int32)
+
+            def exec_chunk(rep_ids=rep_ids, blocks=blocks, r_b=r_b,
+                           c_b=c_b, mesh=mesh):
+                return obs_trace.fenced(
+                    f"fleet.exec[{strategy}]", _fleet_core,
+                    key, rep_ids, blocks, r_b, c_b,
+                    strategy=strategy, p=p, max_r=max_r,
+                    oracle=oracle, mesh=mesh)
+
+            jc, jm = exec_chunk() if ctx is None else ctx.execute(
+                ci, exec_chunk)
+            with obs_trace.span("fleet.reduce", chunk=ci, n_jobs=Jc):
+                res = _chunk_result(jc, jm, cjobs.D, cjobs.C, reps, Jc, B)
+                acc.add(res, n_jobs=Jc)
+            r_parts.append(np.asarray(r_j))
+            thp_parts.append(np.asarray(th_p))
+            thc_parts.append(np.asarray(th_c))
+            if saver is not None:
+                crash_here = (ctx is not None
+                              and bool(ctx.plan.at(ci, "crash")))
+                if ((ci + 1) % cfg.every == 0 or ci == n_chunks - 1
+                        or crash_here):
+                    saver.save(ci + 1, recovery.pack_run_state(
+                        acc, (r_parts, thp_parts, thc_parts),
+                        next_chunk=ci + 1, fingerprint=fp))
+                    if crash_here:
+                        # a simulated crash must not outrun its own
+                        # commit — the resume contract requires the
+                        # chunk it died after to be on disk
+                        saver.wait()
+            if ctx is not None:
+                ctx.maybe_crash(ci)
+    finally:
+        if saver is not None:
+            saver.wait()
 
     result = acc.finalize()
     return RunOutput(
@@ -275,30 +355,60 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
 def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
                   r_min_from_ns: bool = True, max_r: int = 8,
                   reps: int = 1, mesh=None, block_jobs: int = 64,
-                  chunk_jobs=None, pad_to=None):
+                  chunk_jobs=None, pad_to=None, chaos=None,
+                  checkpoint=None, resume: bool = False):
     """Fleet mirror of `sim.runner.run_all` (same r_min-from-NS protocol).
 
     `jobs` may be a JobSet, a WorkloadTrace, or a workload-registry
-    scenario name (resolved to its trace, which streams when chunked).
+    scenario name (resolved to its trace; a Scenario's declared fault
+    schedule becomes the default `chaos` plan when none is passed).
+    chaos: a `chaos.FaultPlan` applied to EVERY strategy's run — each
+        strategy gets a fresh `ChaosContext` (injection budgets are
+        stateful) over the same plan, so all strategies see the same
+        failure sequence.
+    checkpoint: a `chaos.CheckpointConfig` or directory; each strategy
+        checkpoints under its own subdirectory.
     """
     if isinstance(jobs, str):
-        from ..workloads.registry import make_trace
+        from ..workloads.registry import get_scenario, make_trace
+        if chaos is None:
+            faults = getattr(get_scenario(jobs), "faults", None)
+            if faults:
+                from ..chaos.plan import from_faults
+                chaos = from_faults(faults)
         jobs = make_trace(jobs)
     if strategies is None:
         strategies = names()
     key_of = strategy_keys(key, strategies)
     kw = dict(mesh=mesh, theta=theta, max_r=max_r, reps=reps,
               block_jobs=block_jobs, chunk_jobs=chunk_jobs, pad_to=pad_to)
+
+    def kw_of(name):
+        per = dict(kw)
+        if chaos is not None:
+            from ..chaos.inject import ChaosContext
+            from ..chaos.plan import FaultPlan
+            if not isinstance(chaos, FaultPlan):
+                raise TypeError("run_all_fleet takes a FaultPlan (each "
+                                "strategy needs its own ChaosContext)")
+            per["chaos"] = ChaosContext(chaos)
+        if checkpoint is not None:
+            from ..chaos.recovery import as_checkpoint
+            per["checkpoint"] = as_checkpoint(checkpoint).sub(name)
+            per["resume"] = resume
+        return per
+
     outs = {}
     r_min = 0.0
     if "hadoop_ns" in strategies:
         outs["hadoop_ns"] = run_fleet_strategy(
-            key_of["hadoop_ns"], jobs, "hadoop_ns", p, r_min=0.0, **kw)
+            key_of["hadoop_ns"], jobs, "hadoop_ns", p, r_min=0.0,
+            **kw_of("hadoop_ns"))
         if r_min_from_ns:
             r_min = float(outs["hadoop_ns"].result.pocd) - 1e-3
     for name in strategies:
         if name == "hadoop_ns":
             continue
         outs[name] = run_fleet_strategy(key_of[name], jobs, name, p,
-                                        r_min=r_min, **kw)
+                                        r_min=r_min, **kw_of(name))
     return outs, r_min

@@ -27,21 +27,51 @@ class ElasticEvent:
     step: int
     lost_devices: int
     new_shape: tuple
+    failed_ids: tuple = ()    # explicit failed device ids (may be empty)
 
 
-def shrink_mesh(devices, data: int, model: int, lost: int):
+def device_id(d) -> int:
+    """Device id of a jax Device or a raw int id."""
+    return int(getattr(d, "id", d))
+
+
+def shrink_mesh(devices, data: int, model: int, lost: int = 0,
+                failed=None):
     """Largest (data', model) mesh from the surviving devices.
 
-    Drops whole data-rows (the FSDP axis) first — TP groups stay intact, so
+    Drops whole data-rows (the FSDP axis): TP groups stay intact, so
     parameter layouts inside a model group survive and only the batch/FSDP
     dimension reshards.
+
+    failed: explicit failed devices (jax Devices or int ids) — every
+        data-row containing one is dropped whole, wherever it sits in the
+        grid, so non-contiguous loss (a pod losing hosts in the middle of
+        the fleet) reshards correctly. Surviving rows keep their relative
+        order and their intact model groups.
+    lost:  legacy count-based form — the trailing `lost` devices of the
+        flat list are assumed failed (only valid when the loss really is
+        the trailing slice; prefer `failed`).
     """
-    alive = np.asarray(devices).reshape(-1)[: data * model - lost]
-    data_new = len(alive) // model
-    if data_new < 1:
+    grid = np.asarray(devices).reshape(data, model)
+    if failed is not None:
+        failed_ids = {device_id(d) for d in failed}
+        seen = {device_id(d) for d in grid.reshape(-1)}
+        unknown = failed_ids - seen
+        if unknown:
+            raise ValueError(f"failed device ids {sorted(unknown)} are not "
+                             f"in the mesh")
+        row_ok = np.array([
+            all(device_id(d) not in failed_ids for d in row)
+            for row in grid])
+        rows = grid[row_ok]
+    else:
+        alive = grid.reshape(-1)[: data * model - lost]
+        data_new = len(alive) // model
+        rows = alive[: data_new * model].reshape(data_new, model)
+    if len(rows) < 1:
         raise RuntimeError("not enough devices for one model group")
-    grid = alive[: data_new * model].reshape(data_new, model)
-    return Mesh(grid, ("data", "model"))
+    return Mesh(np.asarray(rows).reshape(len(rows), model),
+                ("data", "model"))
 
 
 def replan(cfg, mesh) -> Plan:

@@ -143,3 +143,73 @@ class StreamCombiner:
             return None
         from ..obs.metrics import combine_windows
         return combine_windows(self._capacity)
+
+    # -- chunk-boundary checkpointing (repro.chaos) ------------------------
+    #
+    # The combiner IS the resume state of a chunked run: everything already
+    # reduced lives in these host lists, everything not yet reduced is
+    # recomputable from (key, chunk index). state_dict snapshots the lists
+    # as a flat {name: numpy array} dict; from_state rebuilds a combiner
+    # whose finalize() output is BITWISE identical to the original's —
+    # per-chunk list boundaries are restored exactly (from the weights),
+    # so the final np.concatenate sees the same parts in the same order.
+
+    def state_dict(self) -> dict:
+        import numpy as np
+        if not self._met:
+            raise ValueError("state_dict of an empty StreamCombiner")
+        out = {
+            "met": np.concatenate(self._met),
+            "completion": np.concatenate(self._completion),
+            "cost": np.concatenate(self._cost),
+            "weights": np.asarray(self._weights, np.float64),
+        }
+        if self._queues:
+            out["queue_w"] = np.asarray([w for w, _ in self._queues],
+                                        np.float64)
+            out["queue_vals"] = np.asarray(
+                [[float(q.mean_wait), float(q.max_wait),
+                  float(q.utilization), float(q.preempted),
+                  float(q.admitted_frac)] for _, q in self._queues],
+                np.float32)
+            out["queue_slots"] = np.asarray(
+                [-1 if q.slots is None else int(q.slots)
+                 for _, q in self._queues], np.int64)
+        if self._capacity:
+            for f in self._capacity[0]._fields:
+                out[f"cap_{f}"] = np.stack(
+                    [np.asarray(getattr(m, f)) for m in self._capacity])
+        return out
+
+    @classmethod
+    def from_state(cls, state: dict) -> "StreamCombiner":
+        import numpy as np
+        acc = cls()
+        w = np.asarray(state["weights"], np.float64)
+        splits = np.cumsum(w.astype(np.int64))[:-1]
+        acc._met = list(np.split(np.asarray(state["met"]), splits))
+        acc._completion = list(np.split(np.asarray(state["completion"]),
+                                        splits))
+        acc._cost = list(np.split(np.asarray(state["cost"]), splits))
+        acc._weights = [float(x) for x in w]
+        if "queue_vals" in state:
+            from ..cluster.engine import QueueMetrics
+            vals = np.asarray(state["queue_vals"])
+            slots = np.asarray(state["queue_slots"])
+            acc._queues = [
+                (float(wi), QueueMetrics(
+                    mean_wait=jnp.float32(v[0]), max_wait=jnp.float32(v[1]),
+                    utilization=jnp.float32(v[2]),
+                    preempted=jnp.float32(v[3]),
+                    admitted_frac=jnp.float32(v[4]),
+                    slots=None if int(s) < 0 else int(s)))
+                for wi, v, s in zip(state["queue_w"], vals, slots)]
+        cap_keys = [k for k in state if k.startswith("cap_")]
+        if cap_keys:
+            from ..obs.metrics import CapacityMetrics
+            n = int(np.asarray(state[cap_keys[0]]).shape[0])
+            acc._capacity = [
+                CapacityMetrics(**{f: np.asarray(state[f"cap_{f}"])[i]
+                                   for f in CapacityMetrics._fields})
+                for i in range(n)]
+        return acc

@@ -154,7 +154,8 @@ def strategy_keys(key, strategies) -> dict:
 def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
             r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1,
             devices=None, mesh=None, block_jobs: int = 64,
-            chunk_jobs=None):
+            chunk_jobs=None, chaos=None, checkpoint=None,
+            resume: bool = False):
     """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper).
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
@@ -167,8 +168,13 @@ def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
     with metrics bit-identical across mesh shapes and chunk sizes. With
     none of them set, this single-device path is byte-for-byte the
     historical one. See DESIGN.md §14.
+
+    `chaos=` (a `repro.chaos.FaultPlan`) / `checkpoint=` / `resume=` run
+    under fault injection with chunk-boundary checkpoint/resume — fleet
+    layer only (implied by any of them). See DESIGN.md §16.
     """
-    if devices is not None or mesh is not None or chunk_jobs is not None:
+    if (devices is not None or mesh is not None or chunk_jobs is not None
+            or chaos is not None or checkpoint is not None):
         from ..fleet import fleet_mesh, run_all_fleet
         if mesh is None and devices is not None and int(devices) > 1:
             mesh = fleet_mesh(devices=devices, reps=reps)
@@ -176,7 +182,8 @@ def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
                              strategies=strategies,
                              r_min_from_ns=r_min_from_ns, max_r=max_r,
                              reps=reps, mesh=mesh, block_jobs=block_jobs,
-                             chunk_jobs=chunk_jobs)
+                             chunk_jobs=chunk_jobs, chaos=chaos,
+                             checkpoint=checkpoint, resume=resume)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)

@@ -42,6 +42,10 @@ class Scenario(NamedTuple):
     n_jobs: int = 600                 # default size; callers may override
     hours: float = 30.0               # sets the long-run job rate
     seed: int = 0
+    # declarative fault schedule (plain event dicts — lowered to a
+    # chaos.FaultPlan by chaos.plan.from_faults, so this module never
+    # imports the chaos layer). None = no faults.
+    faults: Optional[Tuple[dict, ...]] = None
 
 
 # Three-class mix calibrated to PAPER_TRACE_STATS: weighted mean tasks
@@ -133,6 +137,31 @@ register(Scenario(
     arrival="batch",
     arrival_kw={"mean_batch": 25.0},
     hours=12.0,
+))
+
+
+register(Scenario(
+    name="pod-loss-flash-crowd",
+    description="flash-crowd arrivals under a pod loss: 2 devices die at "
+                "chunk 2 (2 more at chunk 5), a transient chunk failure "
+                "retries at chunk 3 — the elastic-recovery benchmark "
+                "scenario",
+    classes=(
+        JobClass(name="crowd", weight=0.8, mean_tasks=50.0,
+                 sigma_tasks=0.7, t_min_range=(5.0, 10.0),
+                 beta_range=(1.3, 2.0), deadline_ratio=1.8),
+        JobClass(name="background", weight=0.2, mean_tasks=500.0,
+                 sigma_tasks=1.2, t_min_range=(8.0, 15.0),
+                 beta_range=(1.1, 1.6), deadline_ratio=3.0),
+    ),
+    arrival="batch",
+    arrival_kw={"mean_batch": 25.0},
+    hours=12.0,
+    faults=(
+        {"kind": "device_loss", "chunk": 2, "count": 2},
+        {"kind": "chunk_fail", "chunk": 3, "count": 1},
+        {"kind": "device_loss", "chunk": 5, "count": 2},
+    ),
 ))
 
 
