@@ -250,6 +250,33 @@ def bench_fleet_chaos(n_jobs=1200, chunk_jobs=256, block_jobs=64,
     return dt, n_jobs / dt
 
 
+def bench_serve_throughput(n_requests=100_000, window=2048,
+                           refit_every=4096, probe_every=16, iters=1):
+    """Online serving loop at traffic scale: a request-storm stream served
+    hedged (sresume) with epoch-cadence tail refits — per-epoch batched
+    Algorithm-1 solves, fixed-width compiled windows, probe traffic
+    feeding the TailGovernor, StreamCombiner reduction. The 10^5-request
+    configuration is the acceptance benchmark; the smoke entry shrinks
+    the stream, not the mechanism. Derived metric: requests served/sec
+    (probes included — they are traffic too)."""
+    from repro.serve import make_requests, serve_trace
+
+    reqs = make_requests("request-storm", n_requests=n_requests, seed=0)
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        out = serve_trace(key, reqs, strategy="sresume", theta=1e-3,
+                          window=window, refit_every=refit_every,
+                          probe_every=probe_every)
+        assert out.n_refits > 0, "stream too short to exercise refits"
+        jax.block_until_ready(out.result.pocd)
+        return out
+
+    run()     # warmup: window + per-epoch solve compiles
+    dt = _time(run, warmup=0, iters=iters)
+    return dt, n_requests / dt
+
+
 def bench_workload_synthesize(n_jobs=2700, scenario="diurnal-burst"):
     """Scenario resolution -> trace synthesis -> JobSet lowering (the
     offline workload path every heterogeneous evaluation pays once)."""

@@ -118,6 +118,12 @@ def perf_benches(perf, smoke: bool):
             ("fleet_chaos",
              lambda: perf.bench_fleet_chaos(n_jobs=300, chunk_jobs=96,
                                             block_jobs=32, iters=4)),
+            # serving layer: the online hedged loop (windowed spec.draw,
+            # epoch solves, governor refits) on a reduced stream
+            ("serve_throughput",
+             lambda: perf.bench_serve_throughput(
+                 n_requests=2048, window=256, refit_every=512,
+                 probe_every=16, iters=2)),
         ]
     return [
         ("optimizer_batch_solve", perf.bench_optimizer_throughput),
@@ -135,6 +141,7 @@ def perf_benches(perf, smoke: bool):
         ("fleet_sharded", perf.bench_fleet_sharded),
         ("fleet_chunked", perf.bench_fleet_chunked),
         ("fleet_chaos", perf.bench_fleet_chaos),
+        ("serve_throughput", perf.bench_serve_throughput),
     ]
 
 

@@ -4,7 +4,9 @@ Simulates a 30-hour Google-trace-like workload (2700 jobs, ~1M tasks),
 optimizing r* per job with Algorithm 1 and executing every registered
 strategy: Hadoop-NS, Hadoop-S, Mantri, hedge (baselines) and Clone /
 S-Restart / S-Resume / adaptive (Chronos IR). Prints the Fig-2/3-style
-comparison.
+comparison. All execution routes through the unified facade
+(`repro.simulate` + `RunConfig`), which picks the flat, finite-capacity,
+or fleet backend from the config.
 
 By default capacity is infinite (the paper's analytic regime). With
 `--slots N` the same draws replay through the finite-capacity cluster
@@ -124,7 +126,8 @@ if args.devices > 0 and "xla_force_host_platform_device_count" not in _flags:
 import jax
 import jax.numpy as jnp
 
-from repro.sim import generate, SimParams, run_all
+from repro import RunConfig, simulate
+from repro.sim import generate, SimParams
 from repro.sim.metrics import class_summary
 from repro.strategies import names
 from repro.workloads import list_scenarios, make_trace, summarize, to_jobset
@@ -208,18 +211,20 @@ def _run_or_crash(fn, *a, **kw):
 
 
 if args.slots > 0:
-    from repro.cluster import (run_cluster, GovernorConfig, AdmissionConfig)
+    from repro.cluster import GovernorConfig, AdmissionConfig
     governor = GovernorConfig() if args.governor else None
     admission = (AdmissionConfig(slack=args.admission_slack)
                  if args.admission_slack > 0 else None)
-    outs, r_min = _run_or_crash(
-        run_cluster, jax.random.PRNGKey(0), jobs, SimParams(),
-        slots=args.slots, theta=args.theta,
-        strategies=ORDER, reps=args.reps,
-        discipline=args.discipline, passes=args.passes,
+    # one facade call: the slots/governor/admission knobs route this
+    # config to the finite-capacity engine (repro.api)
+    cfg = RunConfig(
+        theta=args.theta, strategies=ORDER, reps=args.reps,
+        slots=args.slots, discipline=args.discipline, passes=args.passes,
         governor=governor, admission=admission,
         devices=devices, chunk_jobs=chunk_jobs,
         chaos=chaos_plan, checkpoint=ckpt_cfg, resume=args.resume)
+    outs, r_min = _run_or_crash(
+        simulate, jax.random.PRNGKey(0), jobs, SimParams(), cfg=cfg)
     print(f"capacity: {args.slots} slots, {args.discipline} dispatch"
           + (", governor on" if governor else "")
           + (f", admission slack {args.admission_slack}" if admission else ""))
@@ -233,12 +238,13 @@ if args.slots > 0:
               f"{float(o.queue.utilization):6.3f} "
               f"{float(o.queue.mean_wait):8.2f}")
 else:
+    cfg = RunConfig(
+        theta=args.theta, strategies=ORDER, reps=args.reps,
+        devices=devices, block_jobs=args.block_jobs,
+        chunk_jobs=chunk_jobs, chaos=chaos_plan, checkpoint=ckpt_cfg,
+        resume=args.resume)
     outs, r_min = _run_or_crash(
-        run_all, jax.random.PRNGKey(0), jobs, SimParams(),
-        theta=args.theta, strategies=ORDER,
-        reps=args.reps, devices=devices,
-        block_jobs=args.block_jobs, chunk_jobs=chunk_jobs,
-        chaos=chaos_plan, checkpoint=ckpt_cfg, resume=args.resume)
+        simulate, jax.random.PRNGKey(0), jobs, SimParams(), cfg=cfg)
     print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} "
           f"{'mean r*':>8s}")
     for name in ORDER:

@@ -1,3 +1,18 @@
 """repro: Chronos (speculative execution for deadline-critical jobs) as a
-first-class layer of a multi-pod JAX training/serving framework."""
+first-class layer of a multi-pod JAX training/serving framework.
+
+Top-level surface: `RunConfig` + `simulate` (repro.api) — the unified
+entry point routing flat / finite-capacity / fleet / online-serving runs
+by configuration. Both resolve lazily so `import repro` stays free of
+jax imports.
+"""
 __version__ = "1.0.0"
+
+__all__ = ["RunConfig", "simulate", "__version__"]
+
+
+def __getattr__(name):
+    if name in ("RunConfig", "simulate"):
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

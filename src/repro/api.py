@@ -1,0 +1,202 @@
+"""repro.api — one config, one entry point.
+
+The simulator grew six entry points (`run_all`, `run_cluster`,
+`run_fleet_strategy`, `run_all_fleet`, `run_cluster_fleet[_strategy]`),
+each re-declaring the same keyword sprawl (devices/mesh/chunk_jobs/
+block_jobs/chaos/checkpoint/resume/collect_metrics/...). This module
+collapses the sprawl into one frozen `RunConfig` dataclass and a thin
+router:
+
+    from repro import RunConfig, simulate
+    outs, r_min = simulate(key, "flash-crowd", cfg=RunConfig(devices=8))
+
+`simulate` routes by configuration (DESIGN.md §17 has the migration
+table):
+
+  flat      — `sim.runner.run_all` (fleet-sharded/chunked/chaos variants
+              included: run_all already routes on devices/mesh/chunk_jobs)
+  capacity  — `cluster.engine.run_cluster` when any finite-capacity knob
+              is set (slots/discipline/passes/governor/admission/
+              collect_metrics)
+  serve     — `serve.run_serve` when `serve=True` (or any serving knob):
+              the online request-stream path
+
+Every routed call returns the same `(outs, r_min)` shape and is
+bit-identical to calling the underlying entry point directly — the
+facade only forwards; it never re-derives keys or re-orders strategies
+(pinned in tests/test_serve.py goldens).
+
+Legacy style — passing the old entry-point keywords straight to
+`simulate(key, jobs, params, devices=8, chunk_jobs=4096)` — keeps
+working through a deprecation shim that folds them into the config and
+warns once per call site.
+
+Import-layering: this module imports only the stdlib at module level and
+resolves each backend lazily inside `simulate`, so `from repro import
+RunConfig` never drags in jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+__all__ = ["RunConfig", "simulate"]
+
+_PATHS = ("auto", "flat", "capacity", "serve")
+
+#: capacity-engine knobs whose non-default value routes to run_cluster
+_CAPACITY_FIELDS = ("slots", "discipline", "passes", "governor",
+                    "admission", "collect_metrics")
+#: serving knobs whose non-default value routes to run_serve
+_SERVE_FIELDS = ("serve", "window", "refit_every", "probe_every",
+                 "r_override")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything the run entry points used to take as keywords.
+
+    Field groups (all optional; the zero config is the historical
+    single-device `run_all`):
+
+    policy      theta, strategies, r_min_from_ns, max_r, oracle, reps
+    capacity    slots, discipline, passes, governor, admission,
+                collect_metrics             -> routes to run_cluster
+    fleet       devices, mesh, block_jobs, chunk_jobs
+    robustness  chaos, checkpoint, resume
+    serving     serve, window, refit_every, probe_every, r_override
+                                            -> routes to run_serve
+    path        "auto" (route by the groups above) or an explicit
+                "flat" | "capacity" | "serve" override
+    """
+
+    # -- policy (Algorithm 1 / MC) --------------------------------------
+    theta: float = 1e-4
+    strategies: Optional[Sequence[str]] = None
+    r_min_from_ns: bool = True
+    max_r: int = 8
+    oracle: bool = True
+    reps: int = 1
+    # -- finite capacity (repro.cluster) --------------------------------
+    slots: Optional[int] = None
+    discipline: str = "fifo"
+    passes: int = 2
+    governor: Optional[Any] = None        # cluster.GovernorConfig
+    admission: Optional[Any] = None       # cluster.AdmissionConfig
+    collect_metrics: bool = False
+    # -- fleet sharding / streaming (repro.fleet) ------------------------
+    devices: Optional[int] = None
+    mesh: Optional[Any] = None
+    block_jobs: int = 64
+    chunk_jobs: Optional[int] = None
+    # -- robustness (repro.chaos) ---------------------------------------
+    chaos: Optional[Any] = None           # chaos.FaultPlan
+    checkpoint: Optional[Any] = None      # chaos.CheckpointConfig or dir
+    resume: bool = False
+    # -- online serving (repro.serve) ------------------------------------
+    serve: bool = False
+    window: int = 256
+    refit_every: Optional[int] = None
+    probe_every: int = 8
+    r_override: Optional[int] = None
+    # -- routing override -------------------------------------------------
+    path: str = "auto"
+
+    def replace(self, **changes) -> "RunConfig":
+        return dataclasses.replace(self, **changes)
+
+    def _differs(self, names) -> tuple:
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        return tuple(n for n in names
+                     if getattr(self, n) != defaults[n])
+
+    def resolve_path(self) -> str:
+        """The backend this config routes to ("flat"/"capacity"/"serve")."""
+        if self.path != "auto":
+            if self.path not in _PATHS:
+                raise ValueError(f"unknown path {self.path!r}; "
+                                 f"expected one of {_PATHS}")
+            return self.path
+        if self.serve or self._differs(_SERVE_FIELDS):
+            return "serve"
+        if self._differs(_CAPACITY_FIELDS):
+            return "capacity"
+        return "flat"
+
+
+#: legacy keyword -> RunConfig field (identity for every field; kept as an
+#: explicit allowlist so typos fail loudly instead of minting new fields)
+_LEGACY_KWARGS = frozenset(f.name for f in dataclasses.fields(RunConfig))
+
+
+def simulate(key, jobs, params=None, cfg: Optional[RunConfig] = None,
+             **legacy):
+    """Run the configured pipeline; returns (outs, r_min).
+
+    key: PRNG key shared by every strategy (per-name keys are derived
+        inside the backend by registry index, as always).
+    jobs: a JobSet, a WorkloadTrace, a RequestTrace (serving), or a
+        workload-registry scenario name.
+    params: a SimParams (None = defaults).
+    cfg: a RunConfig (None = historical single-device run_all).
+    **legacy: old entry-point keywords, folded into `cfg` with a
+        DeprecationWarning — `simulate(key, jobs, p, devices=8)` behaves
+        exactly like `cfg=RunConfig(devices=8)`.
+    """
+    if cfg is None:
+        cfg = RunConfig()
+    if legacy:
+        unknown = set(legacy) - _LEGACY_KWARGS
+        if unknown:
+            raise TypeError(
+                f"simulate() got unexpected keyword(s) {sorted(unknown)}; "
+                f"RunConfig fields: {sorted(_LEGACY_KWARGS)}")
+        warnings.warn(
+            "passing run keywords to simulate() directly is deprecated; "
+            f"use cfg=RunConfig({', '.join(sorted(legacy))}=...) instead",
+            DeprecationWarning, stacklevel=2)
+        cfg = cfg.replace(**legacy)
+
+    if params is None:
+        from .sim.strategies import SimParams
+        params = SimParams()
+    path = cfg.resolve_path()
+    strategies = (None if cfg.strategies is None
+                  else tuple(cfg.strategies))
+
+    if path == "serve":
+        from .serve import run_serve
+        return run_serve(
+            key, jobs, params, theta=cfg.theta, strategies=strategies,
+            r_min_from_ns=cfg.r_min_from_ns, max_r=cfg.max_r,
+            oracle=cfg.oracle, window=cfg.window,
+            refit_every=cfg.refit_every, probe_every=cfg.probe_every,
+            r_override=cfg.r_override, mesh=cfg.mesh,
+            devices=cfg.devices)
+    if path == "capacity":
+        from .cluster.engine import run_cluster
+        return run_cluster(
+            key, jobs, params, slots=cfg.slots, theta=cfg.theta,
+            strategies=strategies, r_min_from_ns=cfg.r_min_from_ns,
+            max_r=cfg.max_r, oracle=cfg.oracle,
+            discipline=cfg.discipline, passes=cfg.passes,
+            governor=cfg.governor, admission=cfg.admission,
+            reps=cfg.reps, devices=cfg.devices, mesh=cfg.mesh,
+            chunk_jobs=cfg.chunk_jobs,
+            collect_metrics=cfg.collect_metrics, chaos=cfg.chaos,
+            checkpoint=cfg.checkpoint, resume=cfg.resume)
+    # flat (run_all routes its own fleet/chaos variants)
+    if not cfg.oracle:
+        raise ValueError(
+            "oracle=False is a capacity/serve knob; the flat MC path "
+            "always resolves stragglers exactly (run_all has no oracle "
+            "parameter) — set slots/serve or path explicitly")
+    from .sim.runner import run_all
+    return run_all(
+        key, jobs, params, theta=cfg.theta, strategies=strategies,
+        r_min_from_ns=cfg.r_min_from_ns, max_r=cfg.max_r, reps=cfg.reps,
+        devices=cfg.devices, mesh=cfg.mesh, block_jobs=cfg.block_jobs,
+        chunk_jobs=cfg.chunk_jobs, chaos=cfg.chaos,
+        checkpoint=cfg.checkpoint, resume=cfg.resume)

@@ -23,7 +23,8 @@ legacy single-device paths are untouched. See DESIGN.md §14.
 """
 from .blocks import FleetBlocks, block_jobset, gather_index, make_blocks
 from .cluster import run_cluster_fleet, run_cluster_fleet_strategy
-from .mesh import AXES, fleet_mesh, mesh_extents, pad_count, shrink_fleet_mesh
+from .mesh import (AXES, fleet_mesh, job_sharding, mesh_extents, pad_count,
+                   shrink_fleet_mesh)
 from .runner import job_columns, run_all_fleet, run_fleet_strategy
 
 __all__ = [
@@ -33,6 +34,7 @@ __all__ = [
     "fleet_mesh",
     "gather_index",
     "job_columns",
+    "job_sharding",
     "make_blocks",
     "mesh_extents",
     "pad_count",

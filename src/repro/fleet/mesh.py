@@ -97,3 +97,16 @@ def pad_count(n: int, extent: int) -> int:
     if extent < 1:
         raise ValueError(f"extent must be >= 1, got {extent}")
     return -(-n // extent) * extent
+
+
+def job_sharding(mesh: Mesh):
+    """NamedSharding placing a leading axis on the mesh's "job" axis.
+
+    The single-axis placement both the serving window core and the batch
+    block layer use: lane i lives on device i % job_extent, replicated
+    over "rep". Lanes are draw-independent (global-coordinate / rid
+    keying), so computations under this sharding are bit-identical to
+    their unsharded forms.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec("job"))

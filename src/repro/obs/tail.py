@@ -133,8 +133,11 @@ class TailGovernor:
     window's Pareto tail, rebuilds the JobSpec against the configured
     deadline, and re-solves Algorithm 1 over the registered Chronos
     strategies. `decision` always holds the latest (strategy, r*)
-    Solution; `on_resolve` (if set) fires with each fresh one. This is the
-    hook ROADMAP item 1's serving scheduler plugs into.
+    Solution; `on_resolve` (if set) fires with each fresh one. The online
+    serving loop (`repro.serve.serve_trace(refit_every=...)`) is the
+    production consumer: probe-request completions drive `observe`, with
+    cadence = probes-per-epoch so each re-solve lands exactly on an epoch
+    boundary and governs the next epoch's hedging.
     """
     deadline: float
     n_tasks: int

@@ -1,4 +1,35 @@
-"""Serving: prefill/decode engine + Chronos deadline-aware hedging."""
-from .engine import Engine
-from .scheduler import (HedgedScheduler, ReplicaPool, Request, HedgeOutcome,
-                        baseline_no_hedge)
+"""Online serving: strategy-IR hedged scheduling on live request streams.
+
+Layers (see DESIGN.md §17):
+
+* `requests` — `RequestTrace`, the columnar request-stream schema; any
+  `repro.workloads` scenario or trace collapses into one.
+* `scheduler` — `serve_window`, the compiled fixed-width window core
+  (per-request `fold_in(key, rid)` draws through `spec.draw`), plus the
+  request-level `HedgedScheduler` API rebuilt on it.
+* `loop` — `serve_trace` / `run_serve`: known-tail and *online* serving
+  (epochs, unhedged probe traffic, `obs.tail.TailGovernor` refits),
+  streamed through `StreamCombiner` with optional fleet-mesh sharding.
+
+`Engine` (the toy prefill/decode text engine) is imported lazily so the
+serving hot path never pulls in the model stack.
+"""
+from .loop import ServeOutput, run_serve, serve_trace
+from .requests import (RequestTrace, make_requests, requests_from_trace,
+                       uniform_requests)
+from .scheduler import (HedgedScheduler, HedgeOutcome, ReplicaPool, Request,
+                        baseline_no_hedge, serve_window)
+
+__all__ = [
+    "Engine", "HedgedScheduler", "HedgeOutcome", "ReplicaPool", "Request",
+    "RequestTrace", "ServeOutput", "baseline_no_hedge", "make_requests",
+    "requests_from_trace", "run_serve", "serve_trace", "serve_window",
+    "uniform_requests",
+]
+
+
+def __getattr__(name):
+    if name == "Engine":
+        from .engine import Engine
+        return Engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

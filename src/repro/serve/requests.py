@@ -1,0 +1,88 @@
+"""Request traces: the serving workload schema.
+
+A request is a 1-task job: it has an SLA deadline, a heavy-tailed
+Pareto(t_min, beta) service time (co-tenancy, cache state, preemption),
+a price, and an SLA weight — exactly the per-job columns of
+`repro.workloads.WorkloadTrace` with the task axis collapsed to one.
+`requests_from_trace` performs that collapse, so every arrival process
+and scenario preset in the workload registry (flash-crowd bursts,
+diurnal NHPP, multi-tenant tiers) doubles as a request stream.
+
+`rid` is the request's identity for PRNG purposes: every draw a request
+ever receives is keyed by `fold_in(key, rid)` (`scheduler._window_core`),
+so serving a sub-slice of a trace, reordering it, or re-batching it into
+different windows can never change any request's outcome — the serving
+mirror of the fleet layer's global-coordinate keying contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["RequestTrace", "requests_from_trace", "make_requests",
+           "uniform_requests"]
+
+
+class RequestTrace(NamedTuple):
+    """Arrival-sorted per-request columns (R,) — the online schema."""
+
+    rid: np.ndarray          # (R,) int32 — stable PRNG identity
+    arrival: np.ndarray      # (R,) float32 seconds from stream start
+    t_min: np.ndarray        # (R,) float32 Pareto service-time scale
+    beta: np.ndarray         # (R,) float32 Pareto tail index
+    D: np.ndarray            # (R,) float32 relative SLA deadline (s)
+    C: np.ndarray            # (R,) float32 machine-second price
+    theta_scale: np.ndarray  # (R,) float32 SLA-weight multiplier
+    job_class: np.ndarray    # (R,) int32 index into class_names
+    class_names: Tuple[str, ...] = ()
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.rid.shape[0])
+
+    def slice(self, lo: int, hi: int) -> "RequestTrace":
+        """Sub-stream [lo, hi) with identities preserved (subset-proof)."""
+        cut = lambda x: np.asarray(x)[lo:hi]
+        return self._replace(
+            rid=cut(self.rid), arrival=cut(self.arrival),
+            t_min=cut(self.t_min), beta=cut(self.beta), D=cut(self.D),
+            C=cut(self.C), theta_scale=cut(self.theta_scale),
+            job_class=cut(self.job_class))
+
+
+def requests_from_trace(trace) -> RequestTrace:
+    """Collapse a `workloads.WorkloadTrace` to a request stream.
+
+    Each trace job becomes one request (its task count is ignored — a
+    request is a single unit of service); rid = arrival-order position.
+    """
+    n = int(np.asarray(trace.t_min).shape[0])
+    f = lambda x: np.asarray(x, np.float32)
+    return RequestTrace(
+        rid=np.arange(n, dtype=np.int32),
+        arrival=f(trace.arrival), t_min=f(trace.t_min),
+        beta=f(trace.beta), D=f(trace.D), C=f(trace.C),
+        theta_scale=f(trace.theta_scale),
+        job_class=np.asarray(trace.job_class, np.int32),
+        class_names=tuple(getattr(trace, "class_names", ())))
+
+
+def make_requests(scenario: str, n_requests: Optional[int] = None,
+                  seed: Optional[int] = None) -> RequestTrace:
+    """Resolve a workload-registry scenario name to a request stream."""
+    from ..workloads.registry import make_trace
+    return requests_from_trace(
+        make_trace(scenario, n_jobs=n_requests, seed=seed))
+
+
+def uniform_requests(n: int, t_min: float, beta: float, D,
+                     C: float = 1.0) -> RequestTrace:
+    """Homogeneous stream (per-request D may vary) — tests/closed forms."""
+    ones = np.ones(n, np.float32)
+    return RequestTrace(
+        rid=np.arange(n, dtype=np.int32), arrival=0.0 * ones,
+        t_min=t_min * ones, beta=beta * ones,
+        D=np.broadcast_to(np.asarray(D, np.float32), (n,)).copy(),
+        C=C * ones, theta_scale=ones,
+        job_class=np.zeros(n, np.int32), class_names=("uniform",))

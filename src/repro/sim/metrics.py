@@ -51,6 +51,33 @@ def class_summary(jobs: JobSet, result: SimResult) -> dict:
     return out
 
 
+def request_result(reqs, completion, machine) -> SimResult:
+    """SimResult from per-request serving columns (repro.serve).
+
+    A request is a 1-task job, so no segment reduction is needed: the
+    per-request completion IS the job completion and the per-request
+    machine time, priced by C, IS the job cost. Producing the same
+    schema as `aggregate` lets StreamCombiner accumulate serving epochs
+    exactly as it accumulates batch chunks.
+    """
+    completion = jnp.asarray(completion)
+    met = completion <= jnp.asarray(reqs.D)
+    cost = jnp.asarray(machine) * jnp.asarray(reqs.C)
+    return SimResult(pocd=jnp.mean(met.astype(jnp.float32)),
+                     job_met=met, job_completion=completion,
+                     job_cost=cost, mean_cost=jnp.mean(cost))
+
+
+def latency_summary(result: SimResult) -> dict:
+    """Host-side latency percentiles of a result's completion column."""
+    import numpy as np
+    lat = np.asarray(result.job_completion, np.float64)
+    return {"p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99)),
+            "mean": float(lat.mean())}
+
+
 def net_utility(pocd, mean_cost, r_min, theta):
     """Paper's evaluation utility on empirical quantities (Fig 2c/3c)."""
     gap = jnp.maximum(pocd - r_min, 1e-9)

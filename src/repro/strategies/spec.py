@@ -1,7 +1,7 @@
 """StrategySpec — the declarative strategy IR and its registry.
 
 One `StrategySpec` is the single source of truth for a speculative-execution
-strategy across all four backends:
+strategy across all backends:
 
   analytic        — `log_task_fail` / `cost` closed-forms (paper Thms 1-6
                     style), lowered by `utility_of` / `grid_solve` into the
@@ -11,7 +11,10 @@ strategy across all four backends:
   capacity replay — `build_table`: the AttemptTable lowering the cluster
                     engine schedules on a bounded slot pool (`repro.cluster`);
   Pallas          — `tile_outcome`: the per-tile kernel body the fused MC
-                    kernel derives its modes from (`repro.kernels`).
+                    kernel derives its modes from (`repro.kernels`);
+  online serving  — `draw` again, one lane per request: `repro.serve`
+                    executes every registered strategy as a hedging policy
+                    on live request streams with zero serving-side edits.
 
 `register()` / `get()` / `names()` form the registry; every runner,
 optimizer dispatch, kernel mode table, and CLI flag enumerates strategies

@@ -20,6 +20,9 @@ Built-ins:
   different r* per tier from a single batched solve.
 * ``flash-crowd``      — batch-Poisson arrivals (geometric crowds of
   ~25 jobs at Poisson epochs) of small interactive jobs.
+* ``request-storm``    — the serving workload: sub-second 1-task
+  requests on diurnal-NHPP arrivals with a latency-tier SLA split
+  (`repro.serve.make_requests` collapses it to a request stream).
 
 `register` adds user scenarios at runtime (name-keyed, overwrite
 refused unless replace=True).
@@ -162,6 +165,32 @@ register(Scenario(
         {"kind": "chunk_fail", "chunk": 3, "count": 1},
         {"kind": "device_loss", "chunk": 5, "count": 2},
     ),
+))
+
+
+register(Scenario(
+    name="request-storm",
+    description="online-serving stream: sub-second single-unit requests, "
+                "diurnal NHPP traffic, interactive/standard/batch SLA "
+                "tiers (repro.serve's default scenario)",
+    classes=(
+        JobClass(name="interactive", weight=0.3, mean_tasks=1.0,
+                 sigma_tasks=0.0, t_min_range=(0.08, 0.15),
+                 beta_range=(1.2, 1.8), deadline_ratio=2.0,
+                 theta_scale=0.3, price=2.0),
+        JobClass(name="standard", weight=0.55, mean_tasks=1.0,
+                 sigma_tasks=0.0, t_min_range=(0.10, 0.30),
+                 beta_range=(1.2, 2.0), deadline_ratio=2.5,
+                 theta_scale=1.0, price=1.0),
+        JobClass(name="batch", weight=0.15, mean_tasks=1.0,
+                 sigma_tasks=0.0, t_min_range=(0.20, 0.60),
+                 beta_range=(1.1, 1.6), deadline_ratio=4.0,
+                 theta_scale=3.0, price=0.5),
+    ),
+    arrival="diurnal",
+    arrival_kw={"amplitude": 0.7, "period": 86400.0},
+    n_jobs=20000,
+    hours=24.0,
 ))
 
 

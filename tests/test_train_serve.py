@@ -106,15 +106,12 @@ def test_engine_generates():
 def test_hedged_scheduler_beats_no_hedge():
     """Chronos hedging lifts SLA attainment vs the no-hedge baseline under
     heavy-tailed replica latency (the serving analogue of Fig 2a)."""
-    pool = ReplicaPool(n_replicas=8, beta=1.3,
-                       rng=np.random.default_rng(0))
+    pool = ReplicaPool(n_replicas=8, beta=1.3)
     reqs = [Request(deadline=0.5, rid=i, n_tokens=64, submitted=0.0)
             for i in range(400)]
-    sched = HedgedScheduler(pool, theta=1e-2)
+    sched = HedgedScheduler(pool, theta=1e-2, key=jax.random.PRNGKey(0))
     hedged = sched.run_workload(reqs)
-    pool2 = ReplicaPool(n_replicas=8, beta=1.3,
-                        rng=np.random.default_rng(0))
-    base = baseline_no_hedge(pool2, reqs)
+    base = baseline_no_hedge(pool, reqs, key=jax.random.PRNGKey(0))
     assert hedged["pocd"] > base["pocd"] + 0.05
     # and the optimizer keeps the cost multiplier bounded
     assert hedged["mean_machine_time"] < 4 * base["mean_machine_time"]
