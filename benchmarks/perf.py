@@ -22,11 +22,10 @@ def _time(fn, warmup=1, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
-def bench_optimizer_throughput(n_jobs=100_000):
-    """Vectorized exact Algorithm-1 solves per second (the AM's hot loop)."""
+def _solve_bench_jobs(n_jobs):
     rng = np.random.default_rng(0)
     f = lambda a: jnp.asarray(a, jnp.float32)
-    jobs = JobSpec(
+    return JobSpec(
         t_min=f(rng.uniform(5, 20, n_jobs)),
         beta=f(rng.uniform(1.1, 3.0, n_jobs)),
         D=f(rng.uniform(50, 200, n_jobs)),
@@ -37,11 +36,37 @@ def bench_optimizer_throughput(n_jobs=100_000):
         C=f(np.ones(n_jobs)), theta=f(np.full(n_jobs, 1e-4)),
         R_min=f(np.zeros(n_jobs)))
 
+
+def bench_optimizer_throughput(n_jobs=100_000):
+    """Vectorized exact Algorithm-1 solves per second (the AM's hot loop)."""
+    jobs = _solve_bench_jobs(n_jobs)
+
     def run():
         r, u, p, c = solve_batch_jit("sresume", jobs, 32)
         jax.block_until_ready(r)
 
     dt = _time(run)
+    return dt, n_jobs / dt
+
+
+def bench_solve_fused(n_jobs=100_000, r_max=64, strategy="sresume",
+                      backend="auto", iters=3):
+    """Fused Algorithm-1 grid solve (kernels/grid_solve.py) at the
+    acceptance size: 10^5 jobs x r_max=64 in one dispatch, saturation
+    flag included. backend="auto" measures what production dispatches on
+    this host — the Pallas kernel on TPU (the bench platform for the
+    >= 2x claim vs the staged `solve_batch_jit`), the single-program XLA
+    reference elsewhere (interpret-mode Pallas timings would measure the
+    interpreter, not the kernel). Derived metric: jobs solved/sec."""
+    from repro.core.optimizer import solve_batch_sat_jit
+
+    jobs = _solve_bench_jobs(n_jobs)
+
+    def run():
+        out = solve_batch_sat_jit(strategy, jobs, r_max, backend=backend)
+        jax.block_until_ready(out[0])
+
+    dt = _time(run, iters=iters)
     return dt, n_jobs / dt
 
 
@@ -188,7 +213,11 @@ def bench_fleet_chunked(n_jobs=2000, chunk_jobs=512, block_jobs=64,
     combiner (bounded memory). The chunk loop is host-side (numpy block
     assembly per chunk), so a mean over iters inherits GC/allocator
     spikes; best-of-iters is the stable estimator for the gate.
-    Derived metric: jobs streamed/sec."""
+    Derived metric: jobs streamed/sec.
+
+    Pinned to the staged pipeline (fused=False) so this entry stays the
+    solve -> stack -> replay reference that `fleet_fused` is compared
+    against (and that its recorded smoke reference measured)."""
     from repro.fleet import run_fleet_strategy
 
     jobs = generate(n_jobs=n_jobs, seed=0)
@@ -198,7 +227,33 @@ def bench_fleet_chunked(n_jobs=2000, chunk_jobs=512, block_jobs=64,
     def run():
         out = run_fleet_strategy(key, jobs, "sresume", p, reps=1,
                                  block_jobs=block_jobs,
-                                 chunk_jobs=chunk_jobs)
+                                 chunk_jobs=chunk_jobs, fused=False)
+        jax.block_until_ready(out.result.job_cost)
+
+    run()
+    run()    # warmup: per-chunk compiles
+    dt = min(_time(run, warmup=0, iters=1) for _ in range(iters))
+    return dt, n_jobs / dt
+
+
+def bench_fleet_fused(n_jobs=2000, chunk_jobs=512, block_jobs=64,
+                      iters=4):
+    """Device-resident chunk programs: identical sizes to fleet_chunked,
+    but each chunk runs solve -> build_table -> replay as ONE jitted
+    dispatch (no solve dispatch, no r*/choice host round-trip between
+    stages; replay metrics are bit-identical — tests/test_grid_solve.py).
+    Derived metric: jobs streamed/sec; compare against the fleet_chunked
+    entry for the fused-vs-staged pipeline delta."""
+    from repro.fleet import run_fleet_strategy
+
+    jobs = generate(n_jobs=n_jobs, seed=0)
+    p = SimParams()
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        out = run_fleet_strategy(key, jobs, "sresume", p, reps=1,
+                                 block_jobs=block_jobs,
+                                 chunk_jobs=chunk_jobs, fused=True)
         jax.block_until_ready(out.result.job_cost)
 
     run()

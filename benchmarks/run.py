@@ -41,9 +41,10 @@ from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
-# Pre-optimization reference, measured at PR 1 (commit 1eb85f8) on the CI
-# container (CPU, 2 cores, interpret-mode kernels) BEFORE the compiled
-# replay / jitted runner / fused kernel landed:
+# Recorded pre-optimization references (never rewritten). The PR-1
+# entries were measured at commit 1eb85f8 on the CI container (CPU, 2
+# cores, interpret-mode kernels) BEFORE the compiled replay / jitted
+# runner / fused kernel landed:
 #   trace_sim_full     — reps=8 via 8 sequential re-traced run_strategy calls
 #                        (2700 jobs; derived = task-executions/sec)
 #   cluster_replay     — 8 sequential host-orchestrated run_cluster_strategy
@@ -51,6 +52,16 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 #                        dispatched attempt-units/sec)
 #   kernel_pocd_mc     — single-mode launch, J=1024 N=32 R=6 (samples/sec)
 #   kernel_pocd_mc_all — 3-mode sweep via 3 separate pocd_mc launches
+# Entries may override the default commit/label:
+#   optimizer_batch_solve — its pre-provenance headline (recorded before
+#                        entries carried commit stamps), frozen here as
+#                        the migration baseline
+#   solve_fused        — the staged `solve_batch_jit` pipeline at the
+#                        fused bench's own size (10^5 jobs, r_max=64),
+#                        the pipeline the fused grid solve replaces
+#   fleet_fused        — the staged fleet_chunked pipeline at the fused
+#                        bench's own sizes (per-chunk solve dispatch +
+#                        r*/choice host round-trip)
 BASELINE_COMMIT = "1eb85f8"
 BASELINE_LABEL = "PR 1, pre-optimization"
 BASELINE = {
@@ -58,6 +69,21 @@ BASELINE = {
     "cluster_replay": {"us_per_call": 13415000.0, "derived": 74703.0},
     "kernel_pocd_mc": {"us_per_call": 6871.1, "derived": 28613714.7},
     "kernel_pocd_mc_all": {"us_per_call": 14406.5, "derived": 40941419.0},
+    "optimizer_batch_solve": {
+        "us_per_call": 77731.4, "derived": 1286480.7,
+        "commit": "pre-provenance",
+        "label": "headline recorded before commit stamping (r_max=32)"},
+    "solve_fused": {
+        "us_per_call": 206140.6, "derived": 485105.7,
+        "commit": "91ca71b",
+        "label": "staged solve_batch_jit, 10^5 jobs x r_max=64 "
+                 "(CPU host, XLA; the >= 2x fused target is the TPU "
+                 "bench platform)"},
+    "fleet_fused": {
+        "us_per_call": 335177.1, "derived": 5967.0,
+        "commit": "91ca71b",
+        "label": "staged fleet_chunked pipeline, same sizes (per-chunk "
+                 "solve dispatch + host round-trip; CPU host)"},
 }
 
 
@@ -92,6 +118,18 @@ def perf_benches(perf, smoke: bool):
              lambda: perf.bench_pocd_kernel_all(J=200, N=8, R=4, iters=10)),
             ("workload_synthesize",
              lambda: perf.bench_workload_synthesize(n_jobs=400)),
+            # fused solve -> replay pipeline: the batched Algorithm-1
+            # grid solve in one dispatch, and the device-resident fleet
+            # chunk program it feeds (fleet_chunked above stays pinned
+            # to the staged pipeline as the comparison reference)
+            ("optimizer_batch_solve",
+             lambda: perf.bench_optimizer_throughput(n_jobs=5000)),
+            ("solve_fused",
+             lambda: perf.bench_solve_fused(n_jobs=5000, r_max=32,
+                                            iters=5)),
+            ("fleet_fused",
+             lambda: perf.bench_fleet_fused(n_jobs=300, chunk_jobs=96,
+                                            block_jobs=32, iters=4)),
             # strategy-IR layer: full-registry dispatch sweep + the two
             # registry-defined strategies added with the IR
             ("strategy_dispatch",
@@ -127,6 +165,8 @@ def perf_benches(perf, smoke: bool):
         ]
     return [
         ("optimizer_batch_solve", perf.bench_optimizer_throughput),
+        ("solve_fused", perf.bench_solve_fused),
+        ("fleet_fused", perf.bench_fleet_fused),
         ("trace_sim_full", perf.bench_sim_throughput),
         ("cluster_replay", perf.bench_cluster_replay),
         ("kernel_pocd_mc", perf.bench_pocd_kernel),
@@ -194,8 +234,10 @@ def write_perf_tracker(perf_results, record_smoke: bool = False,
             entry["stages"] = r["stages"]
         base = BASELINE.get(r["name"])
         if base is not None:
-            entry["baseline"] = {"commit": BASELINE_COMMIT,
-                                 "label": BASELINE_LABEL, **base}
+            base = dict(base)
+            commit = base.pop("commit", BASELINE_COMMIT)
+            label = base.pop("label", BASELINE_LABEL)
+            entry["baseline"] = {"commit": commit, "label": label, **base}
             entry["speedup_vs_baseline"] = round(
                 base["us_per_call"] / max(r["us_per_call"], 1e-9), 2)
     path.write_text(json.dumps(tracker, indent=1, sort_keys=True) + "\n")

@@ -88,7 +88,7 @@ def build_strategy_table(key, jobs: JobSet, strategy: str, p: SimParams,
                                  oracle=True)
         return table, spec.race
     specs = jobspecs_of(jobs, p, theta, r_min)
-    r_j, choice_j, _, _, _ = solve_jobs_jit(strategy, specs, max_r + 1)
+    r_j, choice_j, _, _, _, _ = solve_jobs_jit(strategy, specs, max_r + 1)
     table = spec.build_table(key, jobs, r_j[jobs.job_id],
                              choice_j[jobs.job_id], p, max_r=max_r,
                              oracle=True)
@@ -385,8 +385,8 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
                                 jnp.float32(r_min))
             if governor is not None and slots is not None:
                 specs = apply_governor(specs, jobs, slots, governor)
-            r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
-                                                          max_r + 1)
+            r_j, choice_j, _, th_p, th_c, _ = solve_jobs_jit(strategy, specs,
+                                                             max_r + 1)
             th_c = th_c * specs.C
             if width == "auto":
                 width = int(jnp.max(r_j)) + 2

@@ -25,6 +25,8 @@ them (the optimizer works on integer r with beta > 1).
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -34,6 +36,28 @@ _GL_NODES, _GL_WEIGHTS = np.polynomial.legendre.leggauss(128)
 # Map from [-1, 1] to (0, 1).
 _GL_U = jnp.asarray((_GL_NODES + 1.0) / 2.0, dtype=jnp.float32)
 _GL_W = jnp.asarray(_GL_WEIGHTS / 2.0, dtype=jnp.float32)
+# active (nodes, weights) — rebound by `quadrature_inputs` when the Thm-4
+# integral is evaluated inside a Pallas kernel body, where the node arrays
+# must enter as kernel operands (Pallas forbids captured consts)
+_GL_ACTIVE = (_GL_U, _GL_W)
+
+
+@contextmanager
+def quadrature_inputs(u, w):
+    """Scoped override of the Gauss-Legendre (nodes, weights) arrays.
+
+    The fused grid-solve kernel (kernels/grid_solve.py) passes the
+    quadrature vectors as kernel operands and traces the cost closures
+    under this context; values are the module constants, so results are
+    unchanged bit-for-bit.
+    """
+    global _GL_ACTIVE
+    prev = _GL_ACTIVE
+    _GL_ACTIVE = (u, w)
+    try:
+        yield
+    finally:
+        _GL_ACTIVE = prev
 
 
 def _p_straggler(t_min, beta, D):
@@ -64,13 +88,13 @@ def cost_clone(r, t_min, beta, D, N, tau_kill):
 
 def _srestart_integral(r, t_min, beta, D, tau_est):
     """I(r) = int_{D-tau}^{inf} (D/(w+tau))^beta * (t_min/w)^(beta r) dw."""
-    u = _GL_U  # (K,) quadrature nodes; broadcast over leading dims of params
+    u, gl_w = _GL_ACTIVE  # (K,) nodes; broadcast over leading param dims
     r_, t_, b_, D_, tau_ = (jnp.asarray(x)[..., None] for x in (r, t_min, beta, D, tau_est))
     Dm_ = jnp.maximum(D_ - tau_, t_)
     w_ = Dm_ / u
     f = jnp.power(D_ / (w_ + tau_), b_) * jnp.power(t_ / w_, b_ * r_)
     # dw = Dm / u^2 du
-    return jnp.sum(f * (Dm_ / (u * u)) * _GL_W, axis=-1)
+    return jnp.sum(f * (Dm_ / (u * u)) * gl_w, axis=-1)
 
 
 def _srestart_cond_above(r, t_min, beta, D, tau_est, tau_kill):

@@ -17,6 +17,7 @@ Two implementations, tested to agree:
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -71,26 +72,43 @@ def utility_grid(strategy: str, job: JobSpec, r_max: int):
     return rs, utility(strategy, rs, job)
 
 
+@functools.partial(jax.jit, static_argnames=("strategy", "r_max"))
+def _solve_grid_device(strategy: str, job: JobSpec, r_max: int):
+    """The whole single-job solve as one program: (r*, U(r*), pocd, cost)
+    device scalars, fetched by the wrapper in ONE transfer."""
+    rs = jnp.arange(r_max, dtype=jnp.float32)
+    us = utility(strategy, rs, job)
+    i = jnp.argmax(us)
+    r = rs[i]
+    return i.astype(jnp.int32), us[i], pocd_of(strategy, r, job), \
+        cost_of(strategy, r, job)
+
+
 def solve_grid(strategy: str, job: JobSpec, r_max: int | None = None) -> Solution:
-    """Exact integer solve for one strategy (python wrapper, jit inside)."""
+    """Exact integer solve for one strategy (python wrapper, jit inside).
+
+    One device->host transfer per call: the argmax, the r*-indexed gather,
+    and the pocd/cost evaluation all stay in a single compiled program
+    whose four scalars come back in one batched `device_get` (the previous
+    float()/int() coercions each forced their own sync inside the span).
+    """
     with obs_trace.span("optimizer.solve_grid", strategy=strategy) as sp:
-        u0 = float(utility(strategy, jnp.float32(0.0), job))
         if r_max is None:
+            u0 = float(utility(strategy, jnp.float32(0.0), job))
             r_max = max(r_upper_bound(strategy, job, u0), 2)
         sp.set(r_max=int(r_max))
-        rs, us = utility_grid(strategy, job, r_max)
-        i = int(jnp.argmax(us))
-        r = float(rs[i])
-        return Solution(strategy, int(r), float(us[i]),
-                        float(pocd_of(strategy, r, job)),
-                        float(cost_of(strategy, r, job)))
+        r, u, p, c = jax.device_get(
+            _solve_grid_device(strategy, job, int(r_max)))
+        return Solution(strategy, int(r), float(u), float(p), float(c))
 
 
 def solve(job: JobSpec, strategies=None) -> Solution:
     """Best (strategy, r) pair for a job.
 
     `strategies=None` sweeps every registered Chronos strategy
-    (`repro.strategies.names(kind="chronos")`).
+    (`repro.strategies.names(kind="chronos")`). All per-strategy solves
+    are dispatched before any result is fetched — one transfer each, no
+    sync between dispatches.
     """
     if strategies is None:
         from ..strategies import names
@@ -104,20 +122,51 @@ def solve(job: JobSpec, strategies=None) -> Solution:
         return best
 
 
-def solve_batch(strategy: str, jobs: JobSpec, r_max: int = 64):
+def solve_batch(strategy: str, jobs: JobSpec, r_max: int = 64,
+                backend: str = "auto"):
     """Vectorized exact solve for a batch of jobs (stacked JobSpec leaves).
 
     Returns (r_opt[int32], utility, pocd, cost) arrays — a thin wrapper over
-    the strategy IR's `grid_solve` on the named spec. jit-compiled; the grid
-    bound r_max must be >= the certified bound for correctness (64 covers
-    every configuration the paper sweeps; the governor asserts via
-    r_upper_bound).
+    the strategy IR's `grid_solve` on the named spec (`backend` selects the
+    fused Pallas kernel vs the vmapped XLA reference; "auto" = pallas on
+    TPU). The grid bound r_max must be >= the certified bound for
+    correctness (64 covers every configuration the paper sweeps; the
+    governor asserts via r_upper_bound) — a too-small grid is no longer
+    silent: any job whose argmax saturated at r_max - 1 triggers a
+    RuntimeWarning here (the jitted entries below return the raw flag
+    instead, host checks being impossible under trace).
     """
+    r, u, p, c, sat = solve_batch_sat_jit(strategy, jobs, r_max,
+                                          backend=backend)
+    n_sat = int(np.asarray(sat).sum())
+    if n_sat:
+        import warnings
+        warnings.warn(
+            f"solve_batch({strategy!r}, r_max={r_max}): argmax saturated "
+            f"at the grid edge for {n_sat} job(s) — r* may be truncated; "
+            f"raise r_max past core.optimizer.r_upper_bound",
+            RuntimeWarning, stacklevel=2)
+    return r, u, p, c
+
+
+def _solve_batch_sat(strategy: str, jobs: JobSpec, r_max: int = 64,
+                     backend: str = "auto"):
+    """(r_opt, utility, pocd, cost, sat) — solve_batch plus the saturation
+    flag, jit-safe (no host check)."""
     from ..strategies import get, grid_solve
-    return grid_solve(get(strategy), jobs, r_max)
+    return grid_solve(get(strategy), jobs, r_max, backend=backend)
 
 
-solve_batch_jit = jax.jit(solve_batch, static_argnums=(0, 2))
+solve_batch_sat_jit = jax.jit(_solve_batch_sat, static_argnums=(0, 2),
+                              static_argnames=("backend",))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2),
+                   static_argnames=("backend",))
+def solve_batch_jit(strategy: str, jobs: JobSpec, r_max: int = 64,
+                    backend: str = "auto"):
+    """Jitted legacy 4-tuple entry (benchmarks, governor hot loops)."""
+    return _solve_batch_sat(strategy, jobs, r_max, backend=backend)[:4]
 
 
 # ---------------------------------------------------------------------------

@@ -39,9 +39,9 @@ from ..obs.metrics import (capacity_metrics, combine_windows,
 from ..sim.metrics import StreamCombiner, aggregate, net_utility
 from ..sim.runner import jobspecs_of, strategy_keys
 from ..sim.trace import jobset_arrays, jobset_of
-from ..strategies import get, names, solve_jobs_jit
+from ..strategies import get, names, solve_jobs, solve_jobs_jit
 from .mesh import AXES, pad_count
-from .runner import chunk_jobset, job_columns
+from .runner import _warn_saturated, chunk_jobset, job_columns
 
 
 def _cluster_exec(rep_ids, key, arrays, r_j, choice_j, admitted, *,
@@ -128,6 +128,47 @@ _cluster_fleet_core = jax.jit(_cluster_core_impl, static_argnames=(
     "oracle", "width", "mesh", "collect_metrics"))
 
 
+def _cluster_fused_impl(key, rep_ids, arrays, specs, admitted, *,
+                        n_jobs: int, strategy: str, p,
+                        slots: Optional[int], discipline: str, passes: int,
+                        max_r: int, oracle: bool, width: Optional[int],
+                        mesh, collect_metrics: bool, backend: str):
+    """Solve -> build -> replay as ONE device-resident program per window.
+
+    The staged path runs every window's `solve_jobs_jit` as its own
+    dispatch (phase 1), syncs the solved r* to host to resolve
+    width="auto", and re-threads r*/choice into the replay dispatch. Here
+    the Algorithm-1 solve (fused Pallas kernel or XLA reference, per
+    `backend`) feeds `spec.build_table` directly on device; the wrapper
+    resolves width statically to max_r + 2 instead (sound and replay-
+    identical: `_narrow_table` only ever drops inactive columns). The
+    governor/admission transforms stay host-side — they are numpy code
+    operating on the specs/admitted inputs, not on solve outputs.
+    """
+    r_j, choice_j, _, th_p, th_c, sat = solve_jobs(
+        strategy, specs, max_r + 1, backend=backend)
+    th_c = th_c * specs.C
+    out = _cluster_core_impl(
+        key, rep_ids, arrays, r_j, choice_j, admitted, n_jobs=n_jobs,
+        strategy=strategy, p=p, slots=slots, discipline=discipline,
+        passes=passes, max_r=max_r, oracle=oracle, width=width, mesh=mesh,
+        collect_metrics=collect_metrics)
+    return out, (r_j, th_p, th_c, sat)
+
+
+_CLUSTER_FUSED_STATIC = (
+    "n_jobs", "strategy", "p", "slots", "discipline", "passes", "max_r",
+    "oracle", "width", "mesh", "collect_metrics", "backend")
+if jax.default_backend() == "cpu":
+    # XLA:CPU does not implement buffer donation (runner.py idiom)
+    _cluster_fleet_fused = jax.jit(
+        _cluster_fused_impl, static_argnames=_CLUSTER_FUSED_STATIC)
+else:
+    _cluster_fleet_fused = jax.jit(
+        _cluster_fused_impl, static_argnames=_CLUSTER_FUSED_STATIC,
+        donate_argnums=(2, 3, 4))
+
+
 def _rep_mean(tree, reps: int):
     """Host-side pad+mask epilogue: drop padded reps, mean the rest in a
     fixed order (bool leaves become float frequencies, as mean_over_reps)."""
@@ -138,23 +179,31 @@ def _rep_mean(tree, reps: int):
         lambda x: np.mean(x.astype(np.float32), axis=0), host)
 
 
-def _solve_chunk(cjobs, strategy, p, theta, r_min, max_r, slots,
-                 governor, cost_scale: float = 1.0):
-    """(r_j, choice_j, th_p, th_c) for one chunk — mirrors the legacy
+def _window_specs(cjobs, strategy, p, theta, r_min, slots, governor,
+                  cost_scale: float = 1.0):
+    """Host-side solve inputs for one window — mirrors the legacy
     `run_cluster_strategy` preamble exactly (cost_scale != 1 is the
     elastic governor's capacity re-pricing of this window's solve)."""
-    J = cjobs.n_jobs
-    if not get(strategy).optimized:
-        zeros = jnp.zeros((J,), jnp.int32)
-        return zeros, zeros, jnp.zeros((J,)), jnp.zeros((J,))
     specs = jobspecs_of(cjobs, p, jnp.float32(theta), jnp.float32(r_min))
     if cost_scale != 1.0:
         specs = specs._replace(C=specs.C * jnp.float32(cost_scale))
     if governor is not None and slots is not None:
         specs = apply_governor(specs, cjobs, slots, governor)
-    r_j, choice_j, _, th_p, th_c = solve_jobs_jit(strategy, specs,
-                                                  max_r + 1)
-    return r_j, choice_j, th_p, th_c * specs.C
+    return specs
+
+
+def _solve_chunk(cjobs, strategy, p, theta, r_min, max_r, slots,
+                 governor, cost_scale: float = 1.0):
+    """(r_j, choice_j, th_p, th_c, sat) for one chunk (staged path)."""
+    J = cjobs.n_jobs
+    if not get(strategy).optimized:
+        zeros = jnp.zeros((J,), jnp.int32)
+        return zeros, zeros, jnp.zeros((J,)), jnp.zeros((J,)), zeros
+    specs = _window_specs(cjobs, strategy, p, theta, r_min, slots,
+                          governor, cost_scale=cost_scale)
+    r_j, choice_j, _, th_p, th_c, sat = solve_jobs_jit(strategy, specs,
+                                                       max_r + 1)
+    return r_j, choice_j, th_p, th_c * specs.C, sat
 
 
 def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
@@ -169,7 +218,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                                pad_to: Optional[int] = None,
                                collect_metrics: bool = False,
                                chaos=None, checkpoint=None,
-                               resume: bool = False) -> ClusterOutput:
+                               resume: bool = False, fused: bool = True,
+                               backend: str = "auto") -> ClusterOutput:
     """Fleet mirror of `cluster.engine.run_cluster_strategy`.
 
     Replications shard over every device of `mesh` (pad+mask to the
@@ -181,6 +231,17 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     events move each window's slot pool, the elastic governor re-prices
     each window's solve, and windows resume from the latest committed
     checkpoint bit-identically.
+
+    fused=True (default) runs optimized strategies as one device-resident
+    solve -> build -> replay program per window with no phase-1 solve
+    dispatches and no host round-trip between solve and replay; width
+    resolves statically to max_r + 2 (replay-identical — see
+    `_cluster_fused_impl`). `backend` picks the Algorithm-1 solve kernel
+    (`strategies.solve_backend`: "auto" = Pallas on TPU, XLA reference
+    elsewhere). Baselines have nothing to solve and always run staged.
+    fused=False keeps the two-phase staged pipeline (bit-identical
+    results, kept as the reference path and for solved-width narrowing
+    when max_r is much larger than any solved r*).
     """
     if passes < 2:
         raise ValueError(f"passes must be >= 2 (pass 1 schedules primaries "
@@ -225,30 +286,46 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
             passes=passes, key=np.asarray(key),
             plan=ctx.plan.fingerprint() if ctx is not None else "")
 
-    # phase 1 — solve every window first, so width="auto" resolves to ONE
-    # static value (max over windows): per-window widths would recompile
-    # the replay per chunk, and a narrower-than-global width would be
-    # unsound for windows with a larger solved r*. Only the per-job solve
-    # outputs are kept; window JobSets (the task-axis memory) are rebuilt
-    # one at a time in phase 2. The solves are deterministic, so a resume
-    # re-runs this phase rather than checkpointing it.
-    bounds, solves = [], []
-    with obs_trace.span("fleet.cluster.solve", strategy=strategy,
-                        n_jobs=J, n_chunks=n_chunks):
-        for ci in range(n_chunks):
-            lo, hi = ci * chunk, min((ci + 1) * chunk, J)
-            bounds.append((lo, hi))
-            slots_ci = ctx.slots_at(ci, slots) if ctx is not None else slots
-            scale_ci = ctx.cost_scale(ci) if ctx is not None else 1.0
-            solves.append(_solve_chunk(chunk_jobset(cols, lo, hi), strategy,
-                                       p, theta, r_min, max_r, slots_ci,
-                                       governor, cost_scale=scale_ci))
+    # phase 1 (staged path only) — solve every window first, so
+    # width="auto" resolves to ONE static value (max over windows):
+    # per-window widths would recompile the replay per chunk, and a
+    # narrower-than-global width would be unsound for windows with a
+    # larger solved r*. Only the per-job solve outputs are kept; window
+    # JobSets (the task-axis memory) are rebuilt one at a time in phase
+    # 2. The solves are deterministic, so a resume re-runs this phase
+    # rather than checkpointing it. The fused path skips this phase
+    # entirely — its width is static and its solves run inside the
+    # per-window program.
+    use_fused = fused and get(strategy).optimized
+    bounds = [(ci * chunk, min((ci + 1) * chunk, J))
+              for ci in range(n_chunks)]
+    solves = None
+    if not use_fused:
+        solves = []
+        with obs_trace.span("fleet.cluster.solve", strategy=strategy,
+                            n_jobs=J, n_chunks=n_chunks):
+            for ci, (lo, hi) in enumerate(bounds):
+                slots_ci = (ctx.slots_at(ci, slots) if ctx is not None
+                            else slots)
+                scale_ci = ctx.cost_scale(ci) if ctx is not None else 1.0
+                solves.append(_solve_chunk(chunk_jobset(cols, lo, hi),
+                                           strategy, p, theta, r_min,
+                                           max_r, slots_ci, governor,
+                                           cost_scale=scale_ci))
     if width == "auto":
-        width = (int(max(int(jnp.max(s[0])) for s in solves)) + 2
-                 if get(strategy).optimized else None)
+        if not get(strategy).optimized:
+            width = None
+        elif use_fused:
+            # static: r* < max_r + 1 always, and _narrow_table only ever
+            # drops inactive columns, so the full grid width replays
+            # bit-identically to the solved-max width
+            width = max_r + 2
+        else:
+            width = int(max(int(jnp.max(s[0])) for s in solves)) + 2
 
     # phase 2 — replay each window on its own slot pool
     acc = StreamCombiner()
+    n_sat = 0
     r_parts, thp_parts, thc_parts = [], [], []
     if resume:
         step = saver.latest()
@@ -269,7 +346,7 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                 if new_mesh is not mesh:
                     mesh = new_mesh
                     rep_ids = layout_of(mesh)
-            (lo, hi), (r_j, choice_j, th_p, th_c) = bounds[ci], solves[ci]
+            lo, hi = bounds[ci]
             slots_w = ctx.slots_at(ci, slots) if ctx is not None else slots
             cjobs = chunk_jobset(cols, lo, hi)
             admitted = None
@@ -277,20 +354,47 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                 admitted = jnp.asarray(admit_jobs(cjobs, slots_w,
                                                   admission))
 
-            def exec_window(rep_ids=rep_ids, cjobs=cjobs, r_j=r_j,
-                            choice_j=choice_j, admitted=admitted,
-                            slots_w=slots_w, mesh=mesh):
-                return obs_trace.fenced(
-                    f"fleet.cluster.replay[{strategy}]",
-                    _cluster_fleet_core,
-                    key, rep_ids, jobset_arrays(cjobs), r_j, choice_j,
-                    admitted, n_jobs=cjobs.n_jobs, strategy=strategy, p=p,
-                    slots=slots_w, discipline=discipline, passes=passes,
-                    max_r=max_r, oracle=oracle, width=width, mesh=mesh,
-                    collect_metrics=collect_metrics)
+            if use_fused:
+                # chaos cost_scale / governor are precomputed host-side
+                # transforms of the solve INPUTS, so reading them here
+                # gives exactly the values phase 1 would have used
+                scale_ci = ctx.cost_scale(ci) if ctx is not None else 1.0
+                specs = _window_specs(cjobs, strategy, p, theta, r_min,
+                                      slots_w, governor,
+                                      cost_scale=scale_ci)
+
+                def exec_window(rep_ids=rep_ids, cjobs=cjobs, specs=specs,
+                                admitted=admitted, slots_w=slots_w,
+                                mesh=mesh):
+                    return obs_trace.fenced(
+                        f"fleet.cluster.fused[{strategy}]",
+                        _cluster_fleet_fused,
+                        key, rep_ids, jobset_arrays(cjobs), specs,
+                        admitted, n_jobs=cjobs.n_jobs, strategy=strategy,
+                        p=p, slots=slots_w, discipline=discipline,
+                        passes=passes, max_r=max_r, oracle=oracle,
+                        width=width, mesh=mesh,
+                        collect_metrics=collect_metrics, backend=backend)
+            else:
+                r_j, choice_j, th_p, th_c, sat_j = solves[ci]
+
+                def exec_window(rep_ids=rep_ids, cjobs=cjobs, r_j=r_j,
+                                choice_j=choice_j, admitted=admitted,
+                                slots_w=slots_w, mesh=mesh):
+                    return obs_trace.fenced(
+                        f"fleet.cluster.replay[{strategy}]",
+                        _cluster_fleet_core,
+                        key, rep_ids, jobset_arrays(cjobs), r_j, choice_j,
+                        admitted, n_jobs=cjobs.n_jobs, strategy=strategy,
+                        p=p, slots=slots_w, discipline=discipline,
+                        passes=passes, max_r=max_r, oracle=oracle,
+                        width=width, mesh=mesh,
+                        collect_metrics=collect_metrics)
 
             out = exec_window() if ctx is None else ctx.execute(
                 ci, exec_window)
+            if use_fused:
+                out, (r_j, th_p, th_c, sat_j) = out
             with obs_trace.span("fleet.cluster.reduce", window=ci):
                 if collect_metrics:
                     res, q, rep_metrics = out
@@ -316,6 +420,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                 r_parts.append(np.asarray(r_j))
                 thp_parts.append(np.asarray(th_p))
                 thc_parts.append(np.asarray(th_c))
+                if get(strategy).optimized:
+                    n_sat += int(np.asarray(sat_j).sum())
             if saver is not None:
                 crash_here = (ctx is not None
                               and bool(ctx.plan.at(ci, "crash")))
@@ -332,6 +438,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         if saver is not None:
             saver.wait()
 
+    if n_sat:
+        _warn_saturated(strategy, n_sat, max_r)
     result = acc.finalize()
     queue = acc.finalize_queue()
     return ClusterOutput(
@@ -352,7 +460,8 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
                       admission: Optional[AdmissionConfig] = None,
                       reps: int = 1, mesh=None, chunk_jobs=None,
                       collect_metrics: bool = False, chaos=None,
-                      checkpoint=None, resume: bool = False):
+                      checkpoint=None, resume: bool = False,
+                      fused: bool = True, backend: str = "auto"):
     """Fleet mirror of `cluster.engine.run_cluster` (same r_min protocol).
 
     chaos / checkpoint follow `runner.run_all_fleet`: one FaultPlan shared
@@ -374,7 +483,8 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
     kw = dict(mesh=mesh, slots=slots, theta=theta, max_r=max_r,
               oracle=oracle, discipline=discipline, passes=passes,
               governor=governor, admission=admission, reps=reps,
-              chunk_jobs=chunk_jobs, collect_metrics=collect_metrics)
+              chunk_jobs=chunk_jobs, collect_metrics=collect_metrics,
+              fused=fused, backend=backend)
 
     def kw_of(name):
         per = dict(kw)

@@ -32,6 +32,7 @@ O(chunk draws) and reduces through `sim.metrics.StreamCombiner`.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +44,7 @@ from ..obs import trace as obs_trace
 from ..sim.metrics import SimResult, StreamCombiner, net_utility
 from ..sim.runner import RunOutput, jobspecs_of, strategy_keys
 from ..sim.trace import build_jobset
-from ..strategies import get, names, solve_jobs_jit
+from ..strategies import get, names, solve_jobs, solve_jobs_jit
 from .blocks import (block_jobset, block_layout, block_task_counts,
                      gather_index, make_blocks, stack_task_column)
 from .mesh import mesh_extents, pad_count
@@ -126,14 +127,53 @@ def _core_impl(key, rep_ids, blocks, r_blocks, choice_blocks, *,
             key, rep_ids, blocks, r_blocks, choice_blocks)
 
 
+def _fused_impl(key, rep_ids, blocks, specs, task_job, *, strategy: str,
+                p, max_r: int, oracle: bool, mesh, backend: str):
+    """Solve -> gather -> replay as ONE device-resident program per chunk.
+
+    The staged path dispatches `solve_jobs_jit` separately, syncs r*/choice
+    to host, and re-threads them through the numpy block assembler before
+    the replay dispatch — two host round-trips of per-job columns per
+    chunk. Here the solve runs in-program (`backend` picks the fused
+    Pallas kernel or the XLA reference) and the block layout's gather is
+    applied on device: `task_job` is the host-precomputed geometry column
+    (pure layout, no solve outputs) mapping each (block, slot) to its
+    chunk job index, with padding slots pointing at the appended zero row
+    — exactly the fill value `stack_task_column` writes — so the replay
+    consumes bit-identical r/choice blocks without r* ever leaving the
+    device.
+    """
+    r_j, choice_j, _, th_p, th_c, sat = solve_jobs(
+        strategy, specs, max_r + 1, backend=backend)
+    th_c = th_c * specs.C
+    pad0 = lambda x: jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+    r_b = pad0(r_j)[task_job]
+    c_b = pad0(choice_j)[task_job]
+    jc, jm = _core_impl(key, rep_ids, blocks, r_b, c_b, strategy=strategy,
+                        p=p, max_r=max_r, oracle=oracle, mesh=mesh)
+    return jc, jm, r_j, th_p, th_c, sat
+
+
 _STATIC = ("strategy", "p", "max_r", "oracle", "mesh")
 if jax.default_backend() == "cpu":
     # XLA:CPU does not implement buffer donation — donating would only
-    # log warnings per chunk, so the CPU entry skips it
+    # log warnings per chunk, so the CPU entries skip it
     _fleet_core = jax.jit(_core_impl, static_argnames=_STATIC)
+    _fleet_fused = jax.jit(_fused_impl,
+                           static_argnames=_STATIC + ("backend",))
 else:
     _fleet_core = jax.jit(_core_impl, static_argnames=_STATIC,
                           donate_argnums=(2, 3, 4))
+    _fleet_fused = jax.jit(_fused_impl,
+                           static_argnames=_STATIC + ("backend",),
+                           donate_argnums=(2, 3, 4))
+
+
+def _warn_saturated(strategy: str, n_sat: int, max_r: int):
+    warnings.warn(
+        f"fleet solve[{strategy}]: r* saturated at the grid edge "
+        f"(max_r={max_r}) for {n_sat} job(s) — raise max_r past "
+        f"core.optimizer.r_upper_bound", RuntimeWarning, stacklevel=3)
 
 
 def _chunk_result(jc, jm, D, C, reps: int, n_jobs: int,
@@ -177,7 +217,8 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                        oracle: bool = True, reps: int = 1,
                        block_jobs: int = 64, chunk_jobs=None,
                        pad_to=None, chaos=None, checkpoint=None,
-                       resume: bool = False) -> RunOutput:
+                       resume: bool = False, fused: bool = True,
+                       backend: str = "auto") -> RunOutput:
     """Fleet mirror of `sim.runner.run_strategy`.
 
     jobs: a JobSet or a WorkloadTrace (traces are chunked column-wise, so
@@ -202,6 +243,13 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         restore the latest committed checkpoint and continue from it
         (bit-identical to an uninterrupted run; the stored fingerprint
         must match this call's configuration).
+    fused: run solve -> block-gather -> replay as one device-resident
+        jitted program per chunk (r*/choice never bounce to host between
+        stages) — bit-identical to the staged path, which `fused=False`
+        preserves verbatim (and which baselines, having no solve, always
+        take).
+    backend: Algorithm-1 grid-solve backend ("auto" | "xla" | "pallas";
+        auto = the fused Pallas kernel on TPU, XLA reference elsewhere).
     """
     spec = get(strategy)
     if not spec.detectable:
@@ -255,6 +303,7 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     theta_f = jnp.float32(theta)
     r_min_f = jnp.float32(r_min)
     acc = StreamCombiner()
+    n_sat = 0
     r_parts, thp_parts, thc_parts = [], [], []
     if resume:
         step = saver.latest()
@@ -278,24 +327,31 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
             lo, hi = ci * chunk, min((ci + 1) * chunk, J)
             cjobs = chunk_jobset(cols, lo, hi)
             Jc = cjobs.n_jobs
-            with obs_trace.span("fleet.solve", strategy=strategy, chunk=ci,
-                                n_jobs=Jc):
-                if not spec.optimized:
-                    r_j = jnp.zeros((Jc,), jnp.int32)
-                    choice_j = jnp.zeros((Jc,), jnp.int32)
-                    th_p = jnp.zeros((Jc,))
-                    th_c = jnp.zeros((Jc,))
-                else:
-                    specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
-                    scale = ctx.cost_scale(ci) if ctx is not None else 1.0
-                    if scale != 1.0:
-                        # governor re-pricing under capacity loss: chunks
-                        # not yet dispatched solve r* at the scaled cost
-                        specs = specs._replace(
-                            C=specs.C * jnp.float32(scale))
-                    r_j, choice_j, _, th_p, th_c = solve_jobs_jit(
-                        strategy, specs, max_r + 1)
-                    th_c = th_c * specs.C
+            specs = None
+            if spec.optimized:
+                specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
+                scale = ctx.cost_scale(ci) if ctx is not None else 1.0
+                if scale != 1.0:
+                    # governor re-pricing under capacity loss: chunks
+                    # not yet dispatched solve r* at the scaled cost
+                    specs = specs._replace(C=specs.C * jnp.float32(scale))
+            # baselines have no solve, so there is nothing to fuse: they
+            # always take the (identical) staged path
+            use_fused = fused and spec.optimized
+            if not use_fused:
+                with obs_trace.span("fleet.solve", strategy=strategy,
+                                    chunk=ci, n_jobs=Jc):
+                    if not spec.optimized:
+                        r_j = jnp.zeros((Jc,), jnp.int32)
+                        choice_j = jnp.zeros((Jc,), jnp.int32)
+                        th_p = jnp.zeros((Jc,))
+                        th_c = jnp.zeros((Jc,))
+                        sat_j = jnp.zeros((Jc,), jnp.int32)
+                    else:
+                        r_j, choice_j, _, th_p, th_c, sat_j = \
+                            solve_jobs_jit(strategy, specs, max_r + 1,
+                                           backend=backend)
+                        th_c = th_c * specs.C
             with obs_trace.span("fleet.blocks", chunk=ci, block_jobs=B):
                 layout = block_layout(cjobs, B, pad_blocks_to=job_ext,
                                       tasks_pad=Tb, min_blocks=min_blocks)
@@ -303,27 +359,50 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                                      block_offset=ci * blocks_per_chunk,
                                      layout=layout)
                 jid = np.asarray(cjobs.job_id)
-                r_b = stack_task_column(layout, np.asarray(r_j)[jid], 0,
-                                        np.int32)
-                c_b = stack_task_column(layout, np.asarray(choice_j)[jid],
-                                        0, np.int32)
+                if use_fused:
+                    # pure layout geometry (no solve outputs): task ->
+                    # chunk-job index, with padding slots pointing at Jc —
+                    # the appended zero row in _fused_impl, i.e. exactly
+                    # the fill value the staged stack writes
+                    tj_b = stack_task_column(layout, jid, Jc, np.int32)
+                else:
+                    r_b = stack_task_column(layout, np.asarray(r_j)[jid],
+                                            0, np.int32)
+                    c_b = stack_task_column(layout,
+                                            np.asarray(choice_j)[jid],
+                                            0, np.int32)
 
-            def exec_chunk(rep_ids=rep_ids, blocks=blocks, r_b=r_b,
-                           c_b=c_b, mesh=mesh):
-                return obs_trace.fenced(
-                    f"fleet.exec[{strategy}]", _fleet_core,
-                    key, rep_ids, blocks, r_b, c_b,
-                    strategy=strategy, p=p, max_r=max_r,
-                    oracle=oracle, mesh=mesh)
+            if use_fused:
+                def exec_chunk(rep_ids=rep_ids, blocks=blocks,
+                               specs=specs, tj_b=tj_b, mesh=mesh):
+                    return obs_trace.fenced(
+                        f"fleet.fused[{strategy}]", _fleet_fused,
+                        key, rep_ids, blocks, specs, tj_b,
+                        strategy=strategy, p=p, max_r=max_r,
+                        oracle=oracle, mesh=mesh, backend=backend)
 
-            jc, jm = exec_chunk() if ctx is None else ctx.execute(
-                ci, exec_chunk)
+                jc, jm, r_j, th_p, th_c, sat_j = (
+                    exec_chunk() if ctx is None
+                    else ctx.execute(ci, exec_chunk))
+            else:
+                def exec_chunk(rep_ids=rep_ids, blocks=blocks, r_b=r_b,
+                               c_b=c_b, mesh=mesh):
+                    return obs_trace.fenced(
+                        f"fleet.exec[{strategy}]", _fleet_core,
+                        key, rep_ids, blocks, r_b, c_b,
+                        strategy=strategy, p=p, max_r=max_r,
+                        oracle=oracle, mesh=mesh)
+
+                jc, jm = exec_chunk() if ctx is None else ctx.execute(
+                    ci, exec_chunk)
             with obs_trace.span("fleet.reduce", chunk=ci, n_jobs=Jc):
                 res = _chunk_result(jc, jm, cjobs.D, cjobs.C, reps, Jc, B)
                 acc.add(res, n_jobs=Jc)
             r_parts.append(np.asarray(r_j))
             thp_parts.append(np.asarray(th_p))
             thc_parts.append(np.asarray(th_c))
+            if spec.optimized:
+                n_sat += int(np.asarray(sat_j).sum())
             if saver is not None:
                 crash_here = (ctx is not None
                               and bool(ctx.plan.at(ci, "crash")))
@@ -343,6 +422,8 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         if saver is not None:
             saver.wait()
 
+    if n_sat:
+        _warn_saturated(strategy, n_sat, max_r)
     result = acc.finalize()
     return RunOutput(
         result=result,
@@ -356,7 +437,8 @@ def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
                   r_min_from_ns: bool = True, max_r: int = 8,
                   reps: int = 1, mesh=None, block_jobs: int = 64,
                   chunk_jobs=None, pad_to=None, chaos=None,
-                  checkpoint=None, resume: bool = False):
+                  checkpoint=None, resume: bool = False,
+                  fused: bool = True, backend: str = "auto"):
     """Fleet mirror of `sim.runner.run_all` (same r_min-from-NS protocol).
 
     `jobs` may be a JobSet, a WorkloadTrace, or a workload-registry
@@ -381,7 +463,8 @@ def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
         strategies = names()
     key_of = strategy_keys(key, strategies)
     kw = dict(mesh=mesh, theta=theta, max_r=max_r, reps=reps,
-              block_jobs=block_jobs, chunk_jobs=chunk_jobs, pad_to=pad_to)
+              block_jobs=block_jobs, chunk_jobs=chunk_jobs, pad_to=pad_to,
+              fused=fused, backend=backend)
 
     def kw_of(name):
         per = dict(kw)

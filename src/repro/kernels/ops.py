@@ -13,6 +13,7 @@ import jax
 from .pocd_mc import MODES as MODES  # re-export: tests use ops.MODES
 from .pocd_mc import pocd_mc_pallas, pocd_mc_all_pallas
 from .flash_attention import flash_attention
+from .grid_solve import grid_solve_pallas
 
 
 def _default_interpret() -> bool:
@@ -48,6 +49,22 @@ def pocd_mc_all(u, t_min, beta, D, r_modes, tau_est_frac=0.3,
                               tau_est_frac=tau_est_frac,
                               tau_kill_gap_frac=tau_kill_gap_frac, phi=phi,
                               interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("strategy", "r_max",
+                                             "interpret"))
+def grid_solve_fused(strategy, jobs, r_max, interpret=None):
+    """Fused Algorithm-1 grid solve (kernels/grid_solve.py) on a batched
+    JobSpec. Returns (r_opt, choice, utility, pocd, cost, sat), all (J,);
+    the strategy-IR `grid_solve`/`solve_jobs` dispatch here under
+    backend="pallas". `interpret=None` flips off interpret mode on TPU.
+    """
+    from ..strategies import get
+    from .grid_solve import grid_solve_pallas
+    if interpret is None:
+        interpret = _default_interpret()
+    return grid_solve_pallas(get(strategy), jobs, r_max,
+                             interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "softcap", "block_q",

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -85,12 +86,20 @@ def _epoch_jobspecs(t_min_fit, beta_fit, reqs: RequestTrace, p: SimParams,
 
 
 def _solve_epoch(strategy: str, t_min_fit, beta_fit, reqs: RequestTrace,
-                 p: SimParams, theta, r_min, max_r: int, width: int):
-    """(r, choice) int32 arrays (n_requests,) from the padded grid solve."""
+                 p: SimParams, theta, r_min, max_r: int, width: int,
+                 backend: str = "auto"):
+    """(r, choice) int32 arrays (n_requests,) from the padded grid solve.
+
+    `backend` routes the Algorithm-1 solve (fused Pallas kernel on TPU,
+    vmapped XLA reference otherwise); both int32 columns come back in one
+    batched device->host transfer rather than one sync each.
+    """
     specs = _epoch_jobspecs(t_min_fit, beta_fit, reqs, p, theta, r_min,
                             width)
-    r, choice, _, _, _ = solve_jobs_jit(strategy, specs, max_r + 1)
+    r, choice, _, _, _, _ = solve_jobs_jit(strategy, specs, max_r + 1,
+                                           backend=backend)
     n = reqs.n_requests
+    r, choice = jax.device_get((r, choice))
     return np.asarray(r)[:n], np.asarray(choice)[:n]
 
 
@@ -126,7 +135,7 @@ def serve_trace(key, reqs, p: Optional[SimParams] = None, *,
                 probe_every: int = 8, r_override: Optional[int] = None,
                 mesh=None, tail_capacity: int = 2048,
                 min_samples: int = 16, combiner: Optional[StreamCombiner]
-                = None) -> ServeOutput:
+                = None, backend: str = "auto") -> ServeOutput:
     """Serve one request stream under one strategy; see module doc.
 
     reqs: a RequestTrace, a workloads WorkloadTrace, or a scenario name.
@@ -136,6 +145,9 @@ def serve_trace(key, reqs, p: Optional[SimParams] = None, *,
         both the per-request solve and the governor's fit.
     combiner: accumulate into an existing StreamCombiner (checkpointed
         streaming); a fresh one is created when None.
+    backend: Algorithm-1 backend for the per-epoch r* solves ("auto" |
+        "xla" | "pallas"; auto picks the fused Pallas grid-solve kernel
+        on TPU and the vmapped XLA reference elsewhere).
     """
     if isinstance(reqs, str):
         reqs = make_requests(reqs)
@@ -180,7 +192,8 @@ def serve_trace(key, reqs, p: Optional[SimParams] = None, *,
                     np.int32)
             else:
                 r, ch = _solve_epoch(strategy, reqs.t_min, reqs.beta,
-                                     reqs, p, theta, r_min, max_r, n)
+                                     reqs, p, theta, r_min, max_r, n,
+                                     backend=backend)
             completion, machine = _serve_chunk(
                 key, reqs, r, ch, strategy=strategy, p=p, max_r=max_r,
                 oracle=oracle, window=window, sharding=sharding)
@@ -226,7 +239,7 @@ def serve_trace(key, reqs, p: Optional[SimParams] = None, *,
                 else:
                     r, ch = _solve_epoch(
                         epoch_strategy, fit.t_min, fit.beta, epoch, p,
-                        theta, r_min, max_r, refit_every)
+                        theta, r_min, max_r, refit_every, backend=backend)
                 epoch_strategies.append(epoch_strategy)
 
                 completion = np.empty(e, np.float32)

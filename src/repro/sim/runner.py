@@ -100,7 +100,7 @@ def _run_core(key, arrays, theta, r_min, r_override, *, n_jobs: int,
             th_p = pocd_of(strategy, rf, specs)
             th_c = cost_of(strategy, rf, specs) * specs.C
         else:
-            r_j, choice_j, _, th_p, th_c = solve_jobs(
+            r_j, choice_j, _, th_p, th_c, _ = solve_jobs(
                 strategy, specs, max_r + 1)
             th_c = th_c * specs.C
 

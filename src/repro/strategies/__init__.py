@@ -15,9 +15,9 @@ are the paper's strategies in their historical order, so their per-strategy
 PRNG keys — and therefore their draws — are unaffected by later additions.
 """
 from .table import AttemptTable, assemble
-from .spec import (KINDS, StrategySpec, get, grid_solve, index_of, job_pocd,
-                   names, pocd_of_spec, cost_of_spec, register, solve_jobs,
-                   solve_jobs_jit, utility_of)
+from .spec import (BACKENDS, KINDS, StrategySpec, get, grid_solve, index_of,
+                   job_pocd, names, pocd_of_spec, cost_of_spec, register,
+                   solve_backend, solve_jobs, solve_jobs_jit, utility_of)
 # Registration order defines index_of() — append-only; keep the historical
 # six first (baselines, then the Chronos trio), new strategies after.
 from . import baselines as _baselines    # noqa: F401  hadoop_ns/hadoop_s/mantri
@@ -26,7 +26,8 @@ from . import hedge as _hedge            # noqa: F401
 from . import adaptive as _adaptive      # noqa: F401
 
 __all__ = [
-    "AttemptTable", "assemble", "KINDS", "StrategySpec", "get", "grid_solve",
-    "index_of", "job_pocd", "names", "pocd_of_spec", "cost_of_spec",
-    "register", "solve_jobs", "solve_jobs_jit", "utility_of",
+    "AttemptTable", "assemble", "BACKENDS", "KINDS", "StrategySpec", "get",
+    "grid_solve", "index_of", "job_pocd", "names", "pocd_of_spec",
+    "cost_of_spec", "register", "solve_backend", "solve_jobs",
+    "solve_jobs_jit", "utility_of",
 ]

@@ -154,4 +154,9 @@ ADAPTIVE = register(StrategySpec(
     name="adaptive", kind="meta", race=False, detectable=True,
     draw=sim_adaptive, build_table=build_adaptive,
     log_task_fail=_log_task_fail, cost=_cost,
-    r_slope=slope_reactive, choose=_choose))
+    r_slope=slope_reactive, choose=_choose,
+    # the composite's sub-strategies in choose-id order: the fused Pallas
+    # grid solve folds the per-r argmax over these into its single pass
+    # (the closures above use take_along_axis, which has no Mosaic
+    # lowering); order must match _SUBS / _I_* above
+    components=("clone", "srestart", "sresume")))

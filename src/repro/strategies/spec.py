@@ -61,6 +61,12 @@ class StrategySpec(NamedTuple):
       choose(r, jobs_spec)  -> (J,) int32 per-job sub-strategy id [optional]
       tile_outcome(att, t_min, tau_est, tau_kill, D, r, *, phi)
           -> (completion, machine) Pallas tile body          [optional]
+
+    `components` names the registered sub-strategies a composite (meta)
+    spec maximizes over, in `choose`-id order. The fused Pallas grid-solve
+    kernel folds the composite's per-r sub-strategy argmax into its single
+    pass from these names (`choose`'s take_along_axis form has no Mosaic
+    lowering); the XLA reference path keeps using the closures.
     """
     name: str
     kind: str                 # one of KINDS
@@ -75,6 +81,7 @@ class StrategySpec(NamedTuple):
     r_slope: Optional[Callable] = None
     choose: Optional[Callable] = None
     tile_outcome: Optional[Callable] = None
+    components: Optional[tuple] = None
 
     @property
     def optimized(self) -> bool:
@@ -92,6 +99,15 @@ def register(spec: StrategySpec, replace: bool = False) -> StrategySpec:
         raise ValueError(
             f"strategy {spec.name!r} is kind={spec.kind!r} but lacks the "
             f"analytic log_task_fail/cost closed-forms Algorithm 1 needs")
+    if spec.components:
+        missing = tuple(n for n in spec.components if n not in _REGISTRY)
+        if missing:
+            raise ValueError(
+                f"strategy {spec.name!r} composes unregistered "
+                f"components {missing}")
+        if spec.choose is None:
+            raise ValueError(f"strategy {spec.name!r} declares components "
+                             f"but no choose closure")
     if spec.name in _REGISTRY and not replace:
         raise ValueError(f"strategy {spec.name!r} already registered")
     _REGISTRY[spec.name] = spec
@@ -161,37 +177,74 @@ def utility_of(spec: StrategySpec, r, job):
     return log_term - job.theta * job.C * E
 
 
-def grid_solve(spec: StrategySpec, jobs, r_max: int):
-    """Vectorized exact integer solve over r in {0, ..., r_max - 1}.
+#: Algorithm-1 backends. "xla" is the vmapped reference; "pallas" is the
+#: fused grid-solve kernel (kernels/grid_solve.py), asserted equivalent
+#: for every registered strategy; "auto" picks pallas on TPU and the XLA
+#: reference everywhere else (on CPU the kernel runs in interpret mode —
+#: correct but slower than XLA, so it is test-opt-in off-TPU).
+BACKENDS = ("auto", "xla", "pallas")
 
-    `jobs` is a batched JobSpec (stacked leaves). Returns (r_opt[int32],
-    utility, pocd, cost) arrays — the production Algorithm-1 path
-    (`core.optimizer.solve_batch` delegates here).
-    """
+
+def solve_backend(backend: str = "auto") -> str:
+    """Resolve an Algorithm-1 backend name to "xla" | "pallas"."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown solve backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def _grid_solve_xla(spec: StrategySpec, jobs, r_max: int):
     def one(job):
         rs = jnp.arange(r_max, dtype=jnp.float32)
         us = utility_of(spec, rs, job)
         i = jnp.argmax(us)
         r = rs[i]
+        sat = (i >= r_max - 1).astype(jnp.int32)
         return (i.astype(jnp.int32), us[i], pocd_of_spec(spec, r, job),
-                cost_of_spec(spec, r, job))
+                cost_of_spec(spec, r, job), sat)
 
     return jax.vmap(one)(jobs)
 
 
-def solve_jobs(strategy: str, jobs, r_max: int):
+def grid_solve(spec: StrategySpec, jobs, r_max: int, *, backend="auto"):
+    """Vectorized exact integer solve over r in {0, ..., r_max - 1}.
+
+    `jobs` is a batched JobSpec (stacked leaves). Returns (r_opt[int32],
+    utility, pocd, cost, sat[int32]) arrays — the production Algorithm-1
+    path (`core.optimizer.solve_batch` delegates here). `sat` flags jobs
+    whose argmax landed on the last grid point: their r* may be silently
+    truncated (the grid is only exact when r_max exceeds the certified
+    `r_upper_bound`), so callers warn/assert on it.
+    """
+    if solve_backend(backend) == "pallas":
+        # lazy: kernels import this package at module load (layering rule)
+        from ..kernels.ops import grid_solve_fused
+        r, choice, u, p, c, sat = grid_solve_fused(spec.name, jobs, r_max)
+        return r, u, p, c, sat
+    return _grid_solve_xla(spec, jobs, r_max)
+
+
+def solve_jobs(strategy: str, jobs, r_max: int, *, backend="auto"):
     """Grid solve + the spec's per-job sub-strategy choice.
 
-    Returns (r_opt[int32], choice[int32], utility, pocd, cost); `choice` is
-    zeros for every non-composite strategy.
+    Returns (r_opt[int32], choice[int32], utility, pocd, cost, sat[int32]);
+    `choice` is zeros for every non-composite strategy, `sat` is the grid
+    saturation flag (see `grid_solve`).
     """
     spec = get(strategy)
-    r, u, p, c = grid_solve(spec, jobs, r_max)
+    if solve_backend(backend) == "pallas":
+        from ..kernels.ops import grid_solve_fused
+        r, choice, u, p, c, sat = grid_solve_fused(strategy, jobs, r_max)
+        return r, choice, u, p, c, sat
+    r, u, p, c, sat = _grid_solve_xla(spec, jobs, r_max)
     if spec.choose is None:
         choice = jnp.zeros_like(r)
     else:
         choice = spec.choose(r.astype(jnp.float32), jobs)
-    return r, choice, u, p, c
+    return r, choice, u, p, c, sat
 
 
-solve_jobs_jit = jax.jit(solve_jobs, static_argnums=(0, 2))
+solve_jobs_jit = jax.jit(solve_jobs, static_argnums=(0, 2),
+                         static_argnames=("backend",))

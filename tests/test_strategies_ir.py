@@ -213,7 +213,7 @@ def test_adaptive_choice_matches_per_job_argmax():
     jobs = generate(n_jobs=60, seed=5)
     specs = jobspecs_of(jobs, P, 1e-4, 0.0)
     subs = ("clone", "srestart", "sresume")
-    r_a, ch, u_a, _, _ = solve_jobs("adaptive", specs, 9)
+    r_a, ch, u_a, _, _, _ = solve_jobs("adaptive", specs, 9)
     pure = jnp.stack([solve_jobs(s, specs, 9)[2] for s in subs])
     np.testing.assert_allclose(np.asarray(u_a),
                                np.asarray(jnp.max(pure, axis=0)), rtol=1e-6)
