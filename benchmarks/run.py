@@ -127,6 +127,11 @@ def perf_benches(perf, smoke: bool):
             ("solve_fused",
              lambda: perf.bench_solve_fused(n_jobs=5000, r_max=32,
                                             iters=5)),
+            # cluster-wide joint solve: the Lagrangian dual over the same
+            # grids at a binding budget (repro.coupled)
+            ("joint_solve",
+             lambda: perf.bench_joint_solve(n_jobs=5000, r_max=32,
+                                            iters=5)),
             ("fleet_fused",
              lambda: perf.bench_fleet_fused(n_jobs=300, chunk_jobs=96,
                                             block_jobs=32, iters=4)),
@@ -166,6 +171,7 @@ def perf_benches(perf, smoke: bool):
     return [
         ("optimizer_batch_solve", perf.bench_optimizer_throughput),
         ("solve_fused", perf.bench_solve_fused),
+        ("joint_solve", perf.bench_joint_solve),
         ("fleet_fused", perf.bench_fleet_fused),
         ("trace_sim_full", perf.bench_sim_throughput),
         ("cluster_replay", perf.bench_cluster_replay),

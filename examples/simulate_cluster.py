@@ -20,6 +20,13 @@ per-class SLA weights, with a per-class result breakdown.
 `--strategies` selects a comma-separated subset of
 `repro.strategies.names()` (default: all registered strategies).
 
+With `--budget B` the per-job Algorithm-1 solves couple through one
+shared machine-time budget (`repro.coupled`): total priced spend
+sum(C * E[T]) is capped at B via a single Lagrange multiplier, the
+competitive-cloning baselines (clone_prop / clone_sjf) allocate the
+same budget with their own rules, and a per-strategy spend/lambda
+table prints after the results.
+
 With `--devices N` and/or `--chunk-jobs M` execution routes through the
 device-sharded fleet layer (`repro.fleet`): MC replications and job
 blocks shard over a ("rep", "job") mesh and the trace streams in
@@ -82,6 +89,12 @@ ap.add_argument("--governor", action="store_true",
                 help="enable the load-adaptive r* governor")
 ap.add_argument("--admission-slack", type=float, default=0.0,
                 help="> 0 enables deadline-aware admission control")
+ap.add_argument("--budget", type=float, default=0.0,
+                help="> 0 caps total priced machine time sum(C*E[T]) and "
+                     "routes the Algorithm-1 solve through the "
+                     "cluster-wide joint optimizer (repro.coupled); a "
+                     "slack budget reproduces the independent solve "
+                     "bitwise")
 ap.add_argument("--strategies", default=None,
                 help="comma-separated subset of repro.strategies.names() "
                      "(default: all registered strategies)")
@@ -222,7 +235,8 @@ if args.slots > 0:
         slots=args.slots, discipline=args.discipline, passes=args.passes,
         governor=governor, admission=admission,
         devices=devices, chunk_jobs=chunk_jobs,
-        chaos=chaos_plan, checkpoint=ckpt_cfg, resume=args.resume)
+        chaos=chaos_plan, checkpoint=ckpt_cfg, resume=args.resume,
+        budget=args.budget if args.budget > 0 else None)
     outs, r_min = _run_or_crash(
         simulate, jax.random.PRNGKey(0), jobs, SimParams(), cfg=cfg)
     print(f"capacity: {args.slots} slots, {args.discipline} dispatch"
@@ -242,7 +256,8 @@ else:
         theta=args.theta, strategies=ORDER, reps=args.reps,
         devices=devices, block_jobs=args.block_jobs,
         chunk_jobs=chunk_jobs, chaos=chaos_plan, checkpoint=ckpt_cfg,
-        resume=args.resume)
+        resume=args.resume,
+        budget=args.budget if args.budget > 0 else None)
     outs, r_min = _run_or_crash(
         simulate, jax.random.PRNGKey(0), jobs, SimParams(), cfg=cfg)
     print(f"\n{'strategy':12s} {'PoCD':>8s} {'cost':>10s} {'utility':>9s} "
@@ -252,6 +267,23 @@ else:
         print(f"{name:12s} {float(o.result.pocd):8.3f} "
               f"{float(o.result.mean_cost):10.0f} {float(o.utility):9.3f} "
               f"{float(jnp.mean(o.r_opt)):8.2f}")
+
+if args.budget > 0:
+    print(f"\nbudget {args.budget:.6g} (priced machine time):")
+    for name in ORDER:
+        c = getattr(outs[name], "coupled", None)
+        if c is None:     # baselines run at r = 0 — nothing budgeted
+            continue
+        tag = ("slack" if not bool(c.binding)
+               else ("binding" if bool(c.feasible) else "INFEASIBLE"))
+        print(f"  {name:12s} spend {float(c.spend):12.0f}  "
+              f"unconstrained {float(c.spend_free):12.0f}  "
+              f"lambda {float(c.lam):9.4g}  {tag}")
+
+n_sat = sum(int(getattr(o, "n_saturated", 0)) for o in outs.values())
+if n_sat:
+    print(f"\nnote: r* saturated at the grid edge for {n_sat} "
+          f"job-solve(s) across strategies — consider raising max_r")
 
 # headline strategy: the paper's sresume when run, else the best utility
 best_name = ("sresume" if "sresume" in outs

@@ -61,7 +61,8 @@ class RunConfig:
     Field groups (all optional; the zero config is the historical
     single-device `run_all`):
 
-    policy      theta, strategies, r_min_from_ns, max_r, oracle, reps
+    policy      theta, strategies, r_min_from_ns, max_r, oracle, reps,
+                budget (cluster-wide joint solve, repro.coupled)
     capacity    slots, discipline, passes, governor, admission,
                 collect_metrics             -> routes to run_cluster
     fleet       devices, mesh, block_jobs, chunk_jobs
@@ -79,6 +80,10 @@ class RunConfig:
     max_r: int = 8
     oracle: bool = True
     reps: int = 1
+    #: shared priced machine-time cap sum(C * E[T]) <= budget — routes the
+    #: Algorithm-1 solve through the cluster-wide joint optimizer
+    #: (repro.coupled). None = independent per-job solves (historical).
+    budget: Optional[float] = None
     # -- finite capacity (repro.cluster) --------------------------------
     slots: Optional[int] = None
     discipline: str = "fifo"
@@ -167,6 +172,12 @@ def simulate(key, jobs, params=None, cfg: Optional[RunConfig] = None,
                   else tuple(cfg.strategies))
 
     if path == "serve":
+        if cfg.budget is not None:
+            raise ValueError(
+                "budget= is an offline (flat/capacity) knob: the joint "
+                "solve needs the whole trace's grids up front, which an "
+                "online request stream cannot provide — drop budget or "
+                "set path explicitly")
         from .serve import run_serve
         return run_serve(
             key, jobs, params, theta=cfg.theta, strategies=strategies,
@@ -186,7 +197,8 @@ def simulate(key, jobs, params=None, cfg: Optional[RunConfig] = None,
             reps=cfg.reps, devices=cfg.devices, mesh=cfg.mesh,
             chunk_jobs=cfg.chunk_jobs,
             collect_metrics=cfg.collect_metrics, chaos=cfg.chaos,
-            checkpoint=cfg.checkpoint, resume=cfg.resume)
+            checkpoint=cfg.checkpoint, resume=cfg.resume,
+            budget=cfg.budget)
     # flat (run_all routes its own fleet/chaos variants)
     if not cfg.oracle:
         raise ValueError(
@@ -199,4 +211,4 @@ def simulate(key, jobs, params=None, cfg: Optional[RunConfig] = None,
         r_min_from_ns=cfg.r_min_from_ns, max_r=cfg.max_r, reps=cfg.reps,
         devices=cfg.devices, mesh=cfg.mesh, block_jobs=cfg.block_jobs,
         chunk_jobs=cfg.chunk_jobs, chaos=cfg.chaos,
-        checkpoint=cfg.checkpoint, resume=cfg.resume)
+        checkpoint=cfg.checkpoint, resume=cfg.resume, budget=cfg.budget)

@@ -68,6 +68,8 @@ class ClusterOutput(NamedTuple):
     # caller asks for collect_metrics=True — None otherwise, so existing
     # consumers and the uninstrumented compiled program are untouched
     metrics: Optional[CapacityMetrics] = None
+    n_saturated: int = 0        # jobs whose r* hit the grid edge
+    coupled: Optional[object] = None  # coupled.CoupledInfo (budget= runs)
 
 
 # ---------------------------------------------------------------------------
@@ -354,7 +356,8 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
                          governor: Optional[GovernorConfig] = None,
                          admitted: Optional[np.ndarray] = None,
                          reps: int = 1, width="auto",
-                         collect_metrics: bool = False) -> ClusterOutput:
+                         collect_metrics: bool = False,
+                         budget=None) -> ClusterOutput:
     """Two cached jit entries per strategy — the Algorithm-1 solve and the
     build->replay->metrics program — with no host<->device transfer inside
     the replay. Governor/admission stay host-side trace preprocessing
@@ -378,6 +381,7 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
         oracle = True     # oracle is static: don't compile a second
         #                   identical program for detection-free strategies
     r_j = choice_j = th_p = th_c = None
+    n_sat, info = 0, None
     if get(strategy).optimized:
         with obs_trace.span("cluster.solve", strategy=strategy,
                             n_jobs=jobs.n_jobs):
@@ -385,11 +389,23 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
                                 jnp.float32(r_min))
             if governor is not None and slots is not None:
                 specs = apply_governor(specs, jobs, slots, governor)
-            r_j, choice_j, _, th_p, th_c, _ = solve_jobs_jit(strategy, specs,
-                                                             max_r + 1)
+            if budget is not None:
+                # cluster-wide joint solve (repro.coupled): one shared
+                # multiplier prices every job's r* (budget traced — a
+                # budget sweep reuses the same compiled solve)
+                from ..coupled import solve_jobs_coupled_jit, warn_infeasible
+                (r_j, choice_j, _, th_p, th_c, sat_j), info = \
+                    solve_jobs_coupled_jit(strategy, specs, max_r + 1,
+                                           jnp.float32(budget))
+            else:
+                r_j, choice_j, _, th_p, th_c, sat_j = solve_jobs_jit(
+                    strategy, specs, max_r + 1)
             th_c = th_c * specs.C
+            n_sat = int(jnp.sum(sat_j))
             if width == "auto":
                 width = int(jnp.max(r_j)) + 2
+        if info is not None:
+            warn_infeasible(strategy, info)
     if width == "auto":
         width = None            # baselines are already minimal-width
     adm = None if admitted is None else jnp.asarray(admitted)
@@ -400,7 +416,8 @@ def run_cluster_strategy(key, jobs: JobSet, strategy: str, p: SimParams,
         strategy=strategy, p=p, slots=slots, discipline=discipline,
         passes=passes, max_r=max_r, oracle=oracle, reps=reps, width=width,
         collect_metrics=collect_metrics)
-    return out._replace(queue=out.queue._replace(slots=slots))
+    return out._replace(queue=out.queue._replace(slots=slots),
+                        n_saturated=n_sat, coupled=info)
 
 
 def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
@@ -412,7 +429,7 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
                 admission: Optional[AdmissionConfig] = None,
                 reps: int = 1, devices=None, mesh=None, chunk_jobs=None,
                 collect_metrics: bool = False, chaos=None, checkpoint=None,
-                resume: bool = False):
+                resume: bool = False, budget=None):
     """Finite-capacity mirror of `sim.runner.run_all`.
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
@@ -444,7 +461,8 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
             discipline=discipline, passes=passes, governor=governor,
             admission=admission, reps=reps, mesh=mesh,
             chunk_jobs=chunk_jobs, collect_metrics=collect_metrics,
-            chaos=chaos, checkpoint=checkpoint, resume=resume)
+            chaos=chaos, checkpoint=checkpoint, resume=resume,
+            budget=budget)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)
@@ -457,7 +475,7 @@ def run_cluster(key, jobs, p: SimParams, slots: Optional[int] = None,
     kw = dict(slots=slots, theta=theta, max_r=max_r, oracle=oracle,
               discipline=discipline, passes=passes, governor=governor,
               admitted=admitted, reps=reps,
-              collect_metrics=collect_metrics)
+              collect_metrics=collect_metrics, budget=budget)
     outs = {}
     r_min = 0.0
     if "hadoop_ns" in strategies:

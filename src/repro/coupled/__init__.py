@@ -1,0 +1,18 @@
+"""Cluster-wide joint r* optimization (Lagrangian dual over Algorithm 1).
+
+`solve_jobs_coupled(strategy, jobs, r_max, budget)` is the budgeted
+mirror of `strategies.solve_jobs`; `RunConfig(budget=...)` threads it
+through every runner. See solver.py and DESIGN.md §19.
+"""
+from .solver import (CoupledInfo, coupled_from_grids, dual_lambda,
+                     repair_independent, select_at, solve_jobs_coupled,
+                     solve_jobs_coupled_jit, spend_at, total_utility,
+                     utility_cost_grids, utility_cost_grids_jit,
+                     warn_infeasible)
+
+__all__ = [
+    "CoupledInfo", "coupled_from_grids", "dual_lambda",
+    "repair_independent", "select_at", "solve_jobs_coupled",
+    "solve_jobs_coupled_jit", "spend_at", "total_utility",
+    "utility_cost_grids", "utility_cost_grids_jit", "warn_infeasible",
+]

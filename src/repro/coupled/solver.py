@@ -1,0 +1,253 @@
+"""Cluster-wide joint r* optimization under a shared machine-time budget.
+
+Chronos (paper Sec. V) solves r* independently per job; the slot pool
+couples jobs only at replay time. Xu & Lau (arXiv 1406.0609) pose the
+real problem: maximize TOTAL net utility across the cluster subject to a
+shared speculation budget,
+
+    max   sum_j U_j(r_j)
+    s.t.  sum_j C_j * E_j[T](r_j)  <=  B          (priced machine time)
+
+over the same integer grid Algorithm 1 already enumerates. Because the
+per-job grids are device-resident (``utility_of`` / ``cost_of_spec`` are
+elementwise in (r, job)), the joint problem decomposes through one
+scalar Lagrange multiplier: at price ``lam`` every job independently
+maximizes ``U_j(r) - lam * C_j * E_j[T](r)`` (a single argmax over the
+precomputed grids — no PoCD re-evaluation), and total spend is
+non-increasing in ``lam``, so the binding multiplier is found by one
+vectorized bisection.
+
+Invariants this module pins (tests/test_coupled.py):
+
+  * ``lam = 0`` recovers the independent Algorithm-1 solution BITWISE —
+    the score row ``U - 0 * cost`` is IEEE-identical to ``U`` (cost grids
+    are finite; ``-inf - 0 = -inf``), so the argmax, the gathered
+    utility, and the closed-form PoCD/cost at the chosen r match
+    ``strategies.solve_jobs`` element for element. A slack budget
+    therefore never perturbs an existing run.
+  * the selection at the solved ``lam`` spends at most B whenever B is
+    achievable at all (``feasible``); when even the per-job minimum-cost
+    selection exceeds B the solver returns that minimum-cost selection
+    and flags ``feasible=False`` rather than failing.
+  * ``lam`` is GLOBAL: the fleet runners solve it once over the
+    concatenated per-chunk grids, so chunked == monolithic bitwise (the
+    per-chunk selections are slices of one global selection).
+
+Competitive cloning baselines (arXiv 1501.02330) plug in through the
+``StrategySpec.allocate`` hook: a spec may carry a budget-allocation
+closure that REPLACES the dual solve (budget-proportional shares,
+smallest-job-first grants — see ``strategies/competitive.py``); the
+surrounding machinery (grids, spend accounting, runner threading) is
+shared, so those baselines flow through sim/cluster/fleet with zero
+dispatch edits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..strategies import get
+from ..strategies.spec import (StrategySpec, cost_of_spec, pocd_of_spec,
+                               utility_of)
+
+#: doubling steps bounding lam from above (2^40 ~ 1.1e12 — far past any
+#: utility/cost ratio the float32 grids can express without the argmax
+#: degenerating) and fixed bisection depth (float32 converges in < 30).
+_DOUBLINGS = 40
+_BISECT_ITERS = 60
+
+
+class CoupledInfo(NamedTuple):
+    """Host-inspectable summary of one joint solve."""
+    lam: jnp.ndarray        # scalar f32 — the solved shadow price
+    spend: jnp.ndarray      # scalar f32 — priced machine time of the selection
+    budget: jnp.ndarray     # scalar f32 — the budget solved against
+    spend_free: jnp.ndarray  # scalar f32 — spend of the independent argmax
+    feasible: jnp.ndarray   # bool — some selection meets the budget
+    binding: jnp.ndarray    # bool — the independent solution overspends B
+
+
+def utility_cost_grids(spec: StrategySpec, jobs, r_max: int):
+    """(U, E) grids, each (J, r_max), over r in {0, ..., r_max - 1}.
+
+    Elementwise-identical to the rows `_grid_solve_xla` scans: U is
+    ``utility_of`` over the same float32 iota, E the unpriced expected
+    machine time ``cost_of_spec``. Priced spend is ``E * C`` (the theory
+    cost every runner reports).
+    """
+    def one(job):
+        rs = jnp.arange(r_max, dtype=jnp.float32)
+        return utility_of(spec, rs, job), cost_of_spec(spec, rs, job)
+
+    return jax.vmap(one)(jobs)
+
+
+def _gather(grid, i):
+    return jnp.take_along_axis(grid, i[:, None], axis=1)[:, 0]
+
+
+def select_at(U, cost, lam):
+    """Per-job argmax of the lam-priced score — one row read per job.
+
+    At lam = 0 the score is IEEE-identical to U (finite cost grids), so
+    this degenerates to the independent Algorithm-1 argmax bitwise.
+    """
+    return jnp.argmax(U - lam * cost, axis=-1).astype(jnp.int32)
+
+
+def spend_at(U, cost, lam):
+    """Total priced spend of the lam-selection (non-increasing in lam)."""
+    return jnp.sum(_gather(cost, select_at(U, cost, lam)))
+
+
+def dual_lambda(U, cost, budget):
+    """Smallest lam >= 0 whose selection spends <= budget.
+
+    Doubling search brackets lam (spend is a non-increasing step
+    function of lam), then fixed-depth bisection keeps the feasible
+    upper end — so the returned lam's selection is guaranteed within
+    budget whenever the budget is achievable at all. Fully jittable
+    (fori_loop, no host sync); returns (lam, feasible).
+    """
+    budget = jnp.float32(budget)
+    slack = spend_at(U, cost, 0.0) <= budget
+    feasible = jnp.sum(jnp.min(cost, axis=1)) <= budget
+
+    def dbl(_, hi):
+        return jnp.where(spend_at(U, cost, hi) <= budget, hi, hi * 2.0)
+
+    hi = jax.lax.fori_loop(0, _DOUBLINGS, dbl, jnp.float32(1.0))
+
+    def bis(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = spend_at(U, cost, mid) <= budget
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    _, hi = jax.lax.fori_loop(0, _BISECT_ITERS, bis,
+                              (jnp.float32(0.0), hi))
+    return jnp.where(slack, jnp.float32(0.0), hi), feasible
+
+
+def coupled_from_grids(spec: StrategySpec, jobs, U, E, budget):
+    """Joint selection given precomputed grids (the fleet pre-pass entry).
+
+    jobs: batched JobSpec matching the grid rows. U/E: (J, r_max) from
+    `utility_cost_grids` (E unpriced). Returns the `solve_jobs` tuple
+    (r, choice, u, p, c, sat) — c UNPRICED like solve_jobs, callers
+    multiply by C — plus a `CoupledInfo`.
+    """
+    r_max = U.shape[1]
+    cost = E * jobs.C[:, None]          # priced grid: what the budget caps
+    budget = jnp.float32(budget)
+    i_free = jnp.argmax(U, axis=-1).astype(jnp.int32)
+    spend_free = jnp.sum(_gather(cost, i_free))
+    if spec.allocate is not None:
+        i = spec.allocate(jobs, U, cost, budget).astype(jnp.int32)
+        lam = jnp.float32(0.0)
+        feasible = jnp.sum(_gather(cost, i)) <= budget
+    else:
+        lam, feasible = dual_lambda(U, cost, budget)
+        i = select_at(U, cost, lam)
+    rf = i.astype(jnp.float32)
+    u = _gather(U, i)
+    p = pocd_of_spec(spec, rf, jobs)
+    c = cost_of_spec(spec, rf, jobs)
+    sat = (i >= r_max - 1).astype(jnp.int32)
+    choice = (jnp.zeros_like(i) if spec.choose is None
+              else spec.choose(rf, jobs))
+    spend = jnp.sum(_gather(cost, i))
+    info = CoupledInfo(lam=lam, spend=spend, budget=budget,
+                       spend_free=spend_free, feasible=feasible,
+                       binding=spend_free > budget)
+    return (i, choice, u, p, c, sat), info
+
+
+def solve_jobs_coupled(strategy: str, jobs, r_max: int, budget):
+    """Budgeted mirror of `strategies.solve_jobs`.
+
+    Returns ((r, choice, u, p, c, sat), CoupledInfo); with a slack
+    budget the first tuple is bitwise the independent `solve_jobs`
+    output. `c` is unpriced E[T] (multiply by C for theory cost), while
+    the budget itself always constrains PRICED spend sum(C * E[T]).
+    """
+    spec = get(strategy)
+    if not spec.optimized:
+        raise ValueError(f"strategy {strategy!r} is a baseline (r = 0 "
+                         f"always) — a speculation budget cannot apply")
+    U, E = utility_cost_grids(spec, jobs, r_max)
+    return coupled_from_grids(spec, jobs, U, E, budget)
+
+
+solve_jobs_coupled_jit = jax.jit(solve_jobs_coupled, static_argnums=(0, 2))
+
+
+def warn_infeasible(strategy: str, info: CoupledInfo):
+    """One host-side RuntimeWarning per solve when no selection fits B.
+
+    The solver already returned the minimum-cost selection in that case;
+    runners call this once after pulling `feasible` (never per chunk —
+    the fleet pre-pass solves globally, so there is one verdict per run).
+    """
+    if not bool(info.feasible):
+        import warnings
+        warnings.warn(
+            f"coupled solve[{strategy}]: no selection meets the budget "
+            f"{float(info.budget):.6g} — the returned minimum-cost "
+            f"selection spends {float(info.spend):.6g} (over budget)",
+            RuntimeWarning, stacklevel=3)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def utility_cost_grids_jit(strategy: str, jobs, r_max: int):
+    return utility_cost_grids(get(strategy), jobs, r_max)
+
+
+def repair_independent(U, E, C, budget):
+    """Naive feasible baseline: uniformly walk the independent r* back.
+
+    The independent solution at a binding budget is INFEASIBLE — the fair
+    comparison for the dual solver is the obvious repair an operator
+    would apply: move every job the same fraction of the way from its
+    unconstrained optimum back toward its CHEAPEST grid level (not r = 0
+    — clone's r = 0 row is its most expensive, see competitive.py) until
+    the total fits. The walk is floored to the grid, and the bisection
+    only ever keeps fractions it verified feasible (spend need not be
+    monotone along the walk for non-monotone cost grids), so the
+    returned (J,) int32 selection is feasible whenever any selection is;
+    `total_utility` scores it.
+    """
+    cost = jnp.asarray(E) * jnp.asarray(C)[:, None]
+    i_free = jnp.argmax(jnp.asarray(U), axis=-1).astype(jnp.int32)
+    i_cheap = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    spend_free = jnp.sum(_gather(cost, i_free))
+
+    def scaled(s):
+        step = (i_free - i_cheap).astype(jnp.float32) * s
+        return i_cheap + jnp.floor(step).astype(jnp.int32)
+
+    def bis(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = jnp.sum(_gather(cost, scaled(mid))) <= budget
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    slack = spend_free <= budget
+    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, bis,
+                              (jnp.float32(0.0), jnp.float32(1.0)))
+    return jnp.where(slack, i_free, scaled(lo))
+
+
+def total_utility(U, i):
+    """Float64-on-host total of the selected per-job utilities.
+
+    Summed in trace order via numpy float64 so monotonicity assertions
+    (bigger budget, never lower total) are exact over elementwise-\\>=
+    per-job columns.
+    """
+    import numpy as np
+    u = np.asarray(_gather(jnp.asarray(U), jnp.asarray(i)))
+    return float(np.sum(u.astype(np.float64)))

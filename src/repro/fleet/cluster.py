@@ -219,7 +219,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                                collect_metrics: bool = False,
                                chaos=None, checkpoint=None,
                                resume: bool = False, fused: bool = True,
-                               backend: str = "auto") -> ClusterOutput:
+                               backend: str = "auto",
+                               budget=None) -> ClusterOutput:
     """Fleet mirror of `cluster.engine.run_cluster_strategy`.
 
     Replications shard over every device of `mesh` (pad+mask to the
@@ -256,6 +257,13 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         raise ValueError("resume=True requires a checkpoint config")
     if not get(strategy).detectable:
         oracle = True
+    if budget is not None and not get(strategy).optimized:
+        budget = None     # baselines run at r = 0: nothing to budget
+    if budget is not None and chaos is not None:
+        raise ValueError(
+            "budget= requires a chaos-free run: the shared multiplier is "
+            "solved once over the whole trace, and chaos re-pricing or "
+            "slot/mesh loss mid-run would invalidate that global solve")
 
     def layout_of(m):
         rep_mult = (pad_to if pad_to is not None
@@ -284,7 +292,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
             reps=reps, max_r=max_r, oracle=oracle, theta=float(theta),
             r_min=float(r_min), slots=slots, discipline=discipline,
             passes=passes, key=np.asarray(key),
-            plan=ctx.plan.fingerprint() if ctx is not None else "")
+            plan=ctx.plan.fingerprint() if ctx is not None else "",
+            budget=None if budget is None else float(budget))
 
     # phase 1 (staged path only) — solve every window first, so
     # width="auto" resolves to ONE static value (max over windows):
@@ -296,11 +305,34 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
     # rather than checkpointing it. The fused path skips this phase
     # entirely — its width is static and its solves run inside the
     # per-window program.
-    use_fused = fused and get(strategy).optimized
+    # A budgeted run is staged: its solve happens ONCE globally below,
+    # and every window replays a slice of that one selection.
+    use_fused = fused and get(strategy).optimized and budget is None
     bounds = [(ci * chunk, min((ci + 1) * chunk, J))
               for ci in range(n_chunks)]
     solves = None
-    if not use_fused:
+    info = None
+    if budget is not None:
+        # global-lambda pre-pass: concatenate every window's (governor-
+        # transformed) solve inputs and solve the joint problem once, so
+        # chunked == monolithic bitwise (chunk-local re-solves would give
+        # each window its own multiplier). Chaos is rejected above, so
+        # every window sees the caller's slots and cost scale.
+        from ..coupled import solve_jobs_coupled_jit, warn_infeasible
+        with obs_trace.span("fleet.cluster.coupled_solve",
+                            strategy=strategy, n_jobs=J,
+                            n_chunks=n_chunks):
+            parts = [_window_specs(chunk_jobset(cols, lo, hi), strategy,
+                                   p, theta, r_min, slots, governor)
+                     for lo, hi in bounds]
+            gspecs = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+            (g_r, g_ch, _, g_p, g_c, g_sat), info = solve_jobs_coupled_jit(
+                strategy, gspecs, max_r + 1, jnp.float32(budget))
+            g = tuple(np.asarray(a) for a in
+                      (g_r, g_ch, g_p, g_c * gspecs.C, g_sat))
+            solves = [tuple(a[lo:hi] for a in g) for lo, hi in bounds]
+        warn_infeasible(strategy, info)
+    elif not use_fused:
         solves = []
         with obs_trace.span("fleet.cluster.solve", strategy=strategy,
                             n_jobs=J, n_chunks=n_chunks):
@@ -448,7 +480,8 @@ def run_cluster_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         utility=net_utility(result.pocd, result.mean_cost, r_min, theta),
         theory_pocd=jnp.asarray(np.concatenate(thp_parts)),
         theory_cost=jnp.asarray(np.concatenate(thc_parts)),
-        queue=queue, metrics=acc.finalize_capacity())
+        queue=queue, metrics=acc.finalize_capacity(),
+        n_saturated=n_sat, coupled=info)
 
 
 def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
@@ -461,7 +494,8 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
                       reps: int = 1, mesh=None, chunk_jobs=None,
                       collect_metrics: bool = False, chaos=None,
                       checkpoint=None, resume: bool = False,
-                      fused: bool = True, backend: str = "auto"):
+                      fused: bool = True, backend: str = "auto",
+                      budget=None):
     """Fleet mirror of `cluster.engine.run_cluster` (same r_min protocol).
 
     chaos / checkpoint follow `runner.run_all_fleet`: one FaultPlan shared
@@ -484,7 +518,7 @@ def run_cluster_fleet(key, jobs, p, slots: Optional[int] = None,
               oracle=oracle, discipline=discipline, passes=passes,
               governor=governor, admission=admission, reps=reps,
               chunk_jobs=chunk_jobs, collect_metrics=collect_metrics,
-              fused=fused, backend=backend)
+              fused=fused, backend=backend, budget=budget)
 
     def kw_of(name):
         per = dict(kw)

@@ -218,7 +218,7 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                        block_jobs: int = 64, chunk_jobs=None,
                        pad_to=None, chaos=None, checkpoint=None,
                        resume: bool = False, fused: bool = True,
-                       backend: str = "auto") -> RunOutput:
+                       backend: str = "auto", budget=None) -> RunOutput:
     """Fleet mirror of `sim.runner.run_strategy`.
 
     jobs: a JobSet or a WorkloadTrace (traces are chunked column-wise, so
@@ -250,6 +250,13 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         take).
     backend: Algorithm-1 grid-solve backend ("auto" | "xla" | "pallas";
         auto = the fused Pallas kernel on TPU, XLA reference elsewhere).
+    budget: shared priced machine-time cap, sum(C * E[T]) <= budget, for
+        the whole trace (repro.coupled). The multiplier is GLOBAL: one
+        joint solve over every job's grids runs before the chunk loop and
+        each chunk replays its slice of that one selection, so chunked
+        runs match the monolithic solve bitwise. Incompatible with
+        `chaos=` (mid-run re-pricing / mesh loss would invalidate the
+        already-solved multiplier).
     """
     spec = get(strategy)
     if not spec.detectable:
@@ -259,6 +266,13 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                          "with an explicit mesh")
     if resume and checkpoint is None:
         raise ValueError("resume=True requires a checkpoint config")
+    if budget is not None and not spec.optimized:
+        budget = None     # baselines run at r = 0: nothing to budget
+    if budget is not None and chaos is not None:
+        raise ValueError(
+            "budget= requires a chaos-free run: the shared multiplier is "
+            "solved once over the whole trace, and chaos re-pricing or "
+            "mesh loss mid-run would invalidate that global solve")
     cols = job_columns(jobs)
     J = int(cols[0].shape[0])
     B = max(1, min(int(block_jobs), J))
@@ -298,10 +312,32 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
             path="flat", strategy=strategy, n_jobs=J, block_jobs=B,
             chunk=chunk, reps=reps, max_r=max_r, oracle=oracle,
             theta=float(theta), r_min=float(r_min), key=np.asarray(key),
-            plan=ctx.plan.fingerprint() if ctx is not None else "")
+            plan=ctx.plan.fingerprint() if ctx is not None else "",
+            budget=None if budget is None else float(budget))
 
     theta_f = jnp.float32(theta)
     r_min_f = jnp.float32(r_min)
+    coupled_sel = info = None
+    if budget is not None:
+        # global-lambda pre-pass: one joint solve over the concatenated
+        # per-chunk JobSpecs (jobspecs_of is elementwise in the job, so
+        # chunk-then-concat is bitwise the monolithic spec batch). Each
+        # chunk then replays its slice of this one selection — never a
+        # per-chunk re-solve, which would give chunk-local multipliers.
+        from ..coupled import solve_jobs_coupled_jit, warn_infeasible
+        with obs_trace.span("fleet.coupled_solve", strategy=strategy,
+                            n_jobs=J, n_chunks=n_chunks):
+            parts = [jobspecs_of(chunk_jobset(cols, ci * chunk,
+                                              min((ci + 1) * chunk, J)),
+                                 p, theta_f, r_min_f)
+                     for ci in range(n_chunks)]
+            gspecs = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+            (g_r, g_ch, _, g_p, g_c, g_sat), info = solve_jobs_coupled_jit(
+                strategy, gspecs, max_r + 1, jnp.float32(budget))
+            coupled_sel = (np.asarray(g_r), np.asarray(g_ch),
+                           np.asarray(g_p), np.asarray(g_c * gspecs.C),
+                           np.asarray(g_sat))
+        warn_infeasible(strategy, info)
     acc = StreamCombiner()
     n_sat = 0
     r_parts, thp_parts, thc_parts = [], [], []
@@ -328,7 +364,7 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
             cjobs = chunk_jobset(cols, lo, hi)
             Jc = cjobs.n_jobs
             specs = None
-            if spec.optimized:
+            if spec.optimized and coupled_sel is None:
                 specs = jobspecs_of(cjobs, p, theta_f, r_min_f)
                 scale = ctx.cost_scale(ci) if ctx is not None else 1.0
                 if scale != 1.0:
@@ -336,12 +372,16 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
                     # not yet dispatched solve r* at the scaled cost
                     specs = specs._replace(C=specs.C * jnp.float32(scale))
             # baselines have no solve, so there is nothing to fuse: they
-            # always take the (identical) staged path
-            use_fused = fused and spec.optimized
+            # always take the (identical) staged path. A budgeted run is
+            # staged too: its solve already happened globally above.
+            use_fused = fused and spec.optimized and coupled_sel is None
             if not use_fused:
                 with obs_trace.span("fleet.solve", strategy=strategy,
                                     chunk=ci, n_jobs=Jc):
-                    if not spec.optimized:
+                    if coupled_sel is not None:
+                        r_j, choice_j, th_p, th_c, sat_j = (
+                            a[lo:hi] for a in coupled_sel)
+                    elif not spec.optimized:
                         r_j = jnp.zeros((Jc,), jnp.int32)
                         choice_j = jnp.zeros((Jc,), jnp.int32)
                         th_p = jnp.zeros((Jc,))
@@ -430,7 +470,8 @@ def run_fleet_strategy(key, jobs, strategy: str, p, *, mesh=None,
         r_opt=jnp.asarray(np.concatenate(r_parts)),
         utility=net_utility(result.pocd, result.mean_cost, r_min, theta),
         theory_pocd=jnp.asarray(np.concatenate(thp_parts)),
-        theory_cost=jnp.asarray(np.concatenate(thc_parts)))
+        theory_cost=jnp.asarray(np.concatenate(thc_parts)),
+        n_saturated=jnp.int32(n_sat), coupled=info)
 
 
 def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
@@ -438,7 +479,7 @@ def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
                   reps: int = 1, mesh=None, block_jobs: int = 64,
                   chunk_jobs=None, pad_to=None, chaos=None,
                   checkpoint=None, resume: bool = False,
-                  fused: bool = True, backend: str = "auto"):
+                  fused: bool = True, backend: str = "auto", budget=None):
     """Fleet mirror of `sim.runner.run_all` (same r_min-from-NS protocol).
 
     `jobs` may be a JobSet, a WorkloadTrace, or a workload-registry
@@ -464,7 +505,7 @@ def run_all_fleet(key, jobs, p, theta=1e-4, strategies=None,
     key_of = strategy_keys(key, strategies)
     kw = dict(mesh=mesh, theta=theta, max_r=max_r, reps=reps,
               block_jobs=block_jobs, chunk_jobs=chunk_jobs, pad_to=pad_to,
-              fused=fused, backend=backend)
+              fused=fused, backend=backend, budget=budget)
 
     def kw_of(name):
         per = dict(kw)

@@ -20,7 +20,7 @@ the on-device compute, not the dispatch.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +39,9 @@ class RunOutput(NamedTuple):
     utility: jnp.ndarray        # scalar net utility (empirical)
     theory_pocd: jnp.ndarray    # (J,) closed-form PoCD at r_opt
     theory_cost: jnp.ndarray    # (J,) closed-form E[T]*C at r_opt
+    n_saturated: jnp.ndarray = jnp.int32(0)   # jobs whose r* hit the grid
+    #                            edge (their solve may be truncated)
+    coupled: Optional[Any] = None  # coupled.CoupledInfo for budget= runs
 
 
 def jobspecs_of(jobs: JobSet, p: S.SimParams, theta, r_min=0.0) -> JobSpec:
@@ -79,12 +82,14 @@ def mean_over_reps(tree):
 
 @functools.partial(jax.jit, static_argnames=(
     "n_jobs", "strategy", "p", "max_r", "oracle", "reps"))
-def _run_core(key, arrays, theta, r_min, r_override, *, n_jobs: int,
+def _run_core(key, arrays, theta, r_min, r_override, budget, *, n_jobs: int,
               strategy: str, p: S.SimParams, max_r: int, oracle: bool,
               reps: int) -> RunOutput:
     jobs = jobset_of(n_jobs, arrays)
     J = jobs.n_jobs
     spec = get(strategy)
+    n_sat = jnp.int32(0)
+    info = None
     if not spec.optimized:
         r_j = jnp.zeros((J,), jnp.int32)
         choice_j = jnp.zeros((J,), jnp.int32)
@@ -99,10 +104,20 @@ def _run_core(key, arrays, theta, r_min, r_override, *, n_jobs: int,
                         else spec.choose(rf, specs))
             th_p = pocd_of(strategy, rf, specs)
             th_c = cost_of(strategy, rf, specs) * specs.C
+        elif budget is not None:
+            # cluster-wide joint solve: one shared machine-time budget
+            # prices every job's r* through a common multiplier (lazy
+            # import — coupled sits above strategies in the layering)
+            from ..coupled.solver import solve_jobs_coupled
+            (r_j, choice_j, _, th_p, th_c, sat_j), info = \
+                solve_jobs_coupled(strategy, specs, max_r + 1, budget)
+            th_c = th_c * specs.C
+            n_sat = jnp.sum(sat_j)
         else:
-            r_j, choice_j, _, th_p, th_c, _ = solve_jobs(
+            r_j, choice_j, _, th_p, th_c, sat_j = solve_jobs(
                 strategy, specs, max_r + 1)
             th_c = th_c * specs.C
+            n_sat = jnp.sum(sat_j)
 
     r_task = r_j[jobs.job_id]
     choice_task = choice_j[jobs.job_id]
@@ -114,30 +129,45 @@ def _run_core(key, arrays, theta, r_min, r_override, *, n_jobs: int,
         res = mean_over_reps(jax.vmap(mc)(jax.random.split(key, reps)))
     return RunOutput(result=res, r_opt=r_j,
                      utility=net_utility(res.pocd, res.mean_cost, r_min, theta),
-                     theory_pocd=th_p, theory_cost=th_c)
+                     theory_pocd=th_p, theory_cost=th_c,
+                     n_saturated=n_sat, coupled=info)
 
 
 def run_strategy(key, jobs: JobSet, strategy: str, p: S.SimParams,
                  theta=1e-4, r_min=0.0, max_r: int = 8,
                  oracle: bool = True, r_override=None,
-                 reps: int = 1) -> RunOutput:
+                 reps: int = 1, budget=None) -> RunOutput:
     """Single compiled trace->metrics program; `reps` vmaps the MC draws.
 
     With reps=1 the draws are identical to the historical per-call path
     (the key is used directly, not split). reps>1 averages the SimResult
     over replications (job_met becomes a per-job met frequency).
+
+    `budget=` (a priced machine-time cap, sum(C * E[T]) <= budget) routes
+    the Algorithm-1 solve through the cluster-wide joint optimizer
+    (`repro.coupled`): a slack budget reproduces the independent solve
+    bitwise; a binding one demotes the least-valuable replication levels
+    first via one shared Lagrange multiplier. The budget is traced, so
+    sweeping it never recompiles.
     """
     if not get(strategy).detectable:
         oracle = True     # oracle is static: don't compile a second
         #                   identical program for detection-free strategies
+    if budget is not None and not get(strategy).optimized:
+        budget = None     # baselines run at r = 0: nothing to budget
     # one fused solve+draw+reduce program: the fenced call attributes its
     # dispatch (trace/compile) and device execution as separate spans
-    return obs_trace.fenced(
+    out = obs_trace.fenced(
         f"sim.run[{strategy}]", _run_core,
         key, jobset_arrays(jobs), jnp.float32(theta), jnp.float32(r_min),
         None if r_override is None else jnp.int32(r_override),
+        None if budget is None else jnp.float32(budget),
         n_jobs=jobs.n_jobs, strategy=strategy, p=p, max_r=max_r,
         oracle=oracle, reps=reps)
+    if budget is not None:
+        from ..coupled.solver import warn_infeasible
+        warn_infeasible(strategy, out.coupled)
+    return out
 
 
 def strategy_keys(key, strategies) -> dict:
@@ -155,7 +185,7 @@ def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
             r_min_from_ns: bool = True, max_r: int = 8, reps: int = 1,
             devices=None, mesh=None, block_jobs: int = 64,
             chunk_jobs=None, chaos=None, checkpoint=None,
-            resume: bool = False):
+            resume: bool = False, budget=None):
     """Run every strategy; R_min for utilities = Hadoop-NS PoCD (paper).
 
     `jobs` is a JobSet, or a `repro.workloads.registry` scenario name
@@ -183,7 +213,8 @@ def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
                              r_min_from_ns=r_min_from_ns, max_r=max_r,
                              reps=reps, mesh=mesh, block_jobs=block_jobs,
                              chunk_jobs=chunk_jobs, chaos=chaos,
-                             checkpoint=checkpoint, resume=resume)
+                             checkpoint=checkpoint, resume=resume,
+                             budget=budget)
     if isinstance(jobs, str):
         from ..workloads.registry import make_jobset
         jobs = make_jobset(jobs)
@@ -202,5 +233,6 @@ def run_all(key, jobs, p: S.SimParams, theta=1e-4, strategies=None,
         if name == "hadoop_ns":
             continue
         outs[name] = run_strategy(key_of[name], jobs, name, p, theta=theta,
-                                  r_min=r_min, max_r=max_r, reps=reps)
+                                  r_min=r_min, max_r=max_r, reps=reps,
+                                  budget=budget)
     return outs, r_min

@@ -24,6 +24,7 @@ from . import baselines as _baselines    # noqa: F401  hadoop_ns/hadoop_s/mantri
 from . import chronos as _chronos        # noqa: F401  clone/srestart/sresume
 from . import hedge as _hedge            # noqa: F401
 from . import adaptive as _adaptive      # noqa: F401
+from . import competitive as _competitive  # noqa: F401  clone_prop/clone_sjf
 
 __all__ = [
     "AttemptTable", "assemble", "BACKENDS", "KINDS", "StrategySpec", "get",

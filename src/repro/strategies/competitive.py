@@ -1,0 +1,100 @@
+"""Competitive task-cloning baselines (arXiv 1501.02330) as StrategySpecs.
+
+Xu & Lau's cloning algorithms split a shared speculation budget across
+jobs with simple competitive rules rather than solving the coupled
+utility problem. Two of them land here as full StrategySpecs so they
+flow through sim / cluster / fleet / serve with zero dispatch edits:
+
+  clone_prop — budget-proportional cloning: job j gets the budget share
+      b_j = B * w_j / sum_k w_k, weighted by its priced ideal work
+      w_j = N_j * t_min_j * C_j, and runs the largest replication level
+      whose priced cost fits inside its share (r = 0 when even the base
+      run exceeds the share — every job must still run).
+  clone_sjf — smallest-job-first cloning: jobs are granted their
+      UNCONSTRAINED Algorithm-1 optimum in ascending order of workload
+      N_j * t_min_j while the cumulative spend (on top of everyone's
+      base r = 0 cost) still fits B; the rest run unreplicated. (The
+      paper grants "full cloning" smallest-first; against a bounded
+      grid the per-job unconstrained optimum is the analogous desire —
+      see DESIGN.md §19.)
+
+Both reuse the `clone` strategy's closed forms, Monte-Carlo draw, and
+AttemptTable lowering verbatim — WITHOUT a budget they are exactly
+`clone` under their own registry PRNG keys. They deliberately carry NO
+`tile_outcome`: the Monte-Carlo kernel mode table (`kernels.pocd_mc.
+MODES`) enumerates tile-armed specs, and a redundant clone tile would
+silently widen every fused multi-mode kernel launch; the fused
+Algorithm-1 GRID kernel needs only the analytic closures, so
+backend="pallas" solves still work. The policies
+live in each spec's `allocate` closure, consulted only by the coupled
+solver (`repro.coupled`); both are utility-blind by construction (the
+competitive rules never read U — that is what the dual solver is being
+measured against), except for clone_sjf's per-job desire.
+
+Registered AFTER `adaptive` (append-only registry order — the PRNG keys
+of every earlier strategy are untouched).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.pocd import log_task_fail_clone
+from ..core.cost import cost_clone
+from ..sim.strategies import sim_clone
+from .chronos import build_clone, gamma_clone, slope_clone
+from .spec import StrategySpec, register
+
+
+def allocate_proportional(jobs, U, cost, budget):
+    """Budget-proportional shares by priced ideal work; largest r that fits.
+
+    Jobs whose share covers nothing fall back to their CHEAPEST grid
+    level, not r = 0: clone cost is not monotone in r (the Pareto
+    min-of-n mean falls faster than the kill tax grows near r = 0, so
+    an unreplicated run is the most expensive row) — every job must run
+    regardless, and the cheapest legal run is the honest minimum.
+    """
+    w = jobs.N * jobs.t_min * jobs.C
+    share = budget * w / jnp.sum(w)
+    r_max = cost.shape[1]
+    slot = jnp.arange(r_max, dtype=jnp.int32)[None, :]
+    fits = cost <= share[:, None]
+    r_cheap = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    r_fit = jnp.max(jnp.where(fits, slot, -1), axis=1).astype(jnp.int32)
+    return jnp.where(r_fit >= 0, r_fit, r_cheap)
+
+
+def allocate_sjf(jobs, U, cost, budget):
+    """Smallest-job-first grants of each job's unconstrained optimum.
+
+    Ascending workload N * t_min; every job pays its cheapest grid level
+    up front (see allocate_proportional on why that is not r = 0 for
+    cloning), and the prefix of small jobs whose cumulative upgrade to
+    the unconstrained Algorithm-1 optimum still fits the budget gets it.
+    """
+    w = jobs.N * jobs.t_min
+    order = jnp.argsort(w)
+    base = jnp.min(cost, axis=1)
+    r_cheap = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    want = jnp.argmax(U, axis=-1).astype(jnp.int32)
+    extra = jnp.take_along_axis(cost, want[:, None], axis=1)[:, 0] - base
+    grant_sorted = (jnp.sum(base) + jnp.cumsum(extra[order])) <= budget
+    grant = jnp.zeros_like(grant_sorted).at[order].set(grant_sorted)
+    return jnp.where(grant, want, r_cheap)
+
+
+def _clone_spec(name: str, allocate) -> StrategySpec:
+    return StrategySpec(
+        name=name, kind="chronos", race=False, detectable=False,
+        draw=lambda key, jobs, r_task, choice_task, p, *, max_r, oracle:
+            sim_clone(key, jobs, r_task, p, max_r=max_r),
+        build_table=build_clone,
+        log_task_fail=lambda r, job:
+            log_task_fail_clone(r, job.t_min, job.beta, job.D),
+        cost=lambda r, job:
+            cost_clone(r, job.t_min, job.beta, job.D, job.N, job.tau_kill),
+        gamma=gamma_clone, r_slope=slope_clone, allocate=allocate)
+
+
+CLONE_PROP = register(_clone_spec("clone_prop", allocate_proportional))
+CLONE_SJF = register(_clone_spec("clone_sjf", allocate_sjf))

@@ -61,6 +61,12 @@ class StrategySpec(NamedTuple):
       choose(r, jobs_spec)  -> (J,) int32 per-job sub-strategy id [optional]
       tile_outcome(att, t_min, tau_est, tau_kill, D, r, *, phi)
           -> (completion, machine) Pallas tile body          [optional]
+      allocate(jobs_spec, U, cost, budget) -> (J,) int32 r per job
+          — budget-allocation policy consulted ONLY by the coupled
+          solver (`repro.coupled`): replaces the Lagrangian dual with
+          the spec's own split of the shared budget (the arXiv
+          1501.02330 competitive-cloning baselines). U/cost are the
+          (J, r_max) utility and PRICED machine-time grids. [optional]
 
     `components` names the registered sub-strategies a composite (meta)
     spec maximizes over, in `choose`-id order. The fused Pallas grid-solve
@@ -82,6 +88,7 @@ class StrategySpec(NamedTuple):
     choose: Optional[Callable] = None
     tile_outcome: Optional[Callable] = None
     components: Optional[tuple] = None
+    allocate: Optional[Callable] = None
 
     @property
     def optimized(self) -> bool:

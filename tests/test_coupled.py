@@ -1,0 +1,263 @@
+"""Cluster-wide joint r* optimization (repro.coupled) + competitive
+baselines: slack-budget bitwise recovery of the independent solve, dual
+feasibility and dominance at binding budgets, global-lambda chunk
+invariance through the fleet runners, RunConfig routing, and hypothesis
+properties of the dual bisection."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import RunConfig, simulate
+from repro.cluster import run_cluster_strategy
+from repro.coupled import (repair_independent, solve_jobs_coupled,
+                           total_utility, utility_cost_grids)
+from repro.sim import SimParams, generate, run_strategy
+from repro.sim.runner import jobspecs_of
+from repro.strategies import get, solve_jobs
+from repro.workloads import make_jobset
+
+P = SimParams()
+KEY = jax.random.PRNGKey(0)
+
+# Acceptance scenario (ISSUE PR 10): multi-tenant-sla at the pinned size
+# and seed, with a budget inside clone's feasible-binding band
+# (min_spend ~ 789_797 < B < spend_free ~ 998_949 at theta=1e-4).
+SCEN, N_JOBS, SEED, THETA, BUDGET = ("multi-tenant-sla", 120, 0, 1e-4,
+                                     850_000.0)
+
+
+@pytest.fixture(scope="module")
+def jobs120():
+    return generate(n_jobs=120, seed=3)
+
+
+@pytest.fixture(scope="module")
+def sla_specs():
+    jobs = make_jobset(SCEN, n_jobs=N_JOBS, seed=SEED)
+    return jobspecs_of(jobs, P, THETA, 0.0)
+
+
+def _band(strategy, specs, r_max=9):
+    """(min_spend, spend_free): the feasible-binding budget interval."""
+    U, E = utility_cost_grids(get(strategy), specs, r_max)
+    cost = np.asarray(E) * np.asarray(specs.C)[:, None]
+    i_free = np.argmax(np.asarray(U), axis=1)
+    return (float(cost.min(axis=1).sum()),
+            float(np.take_along_axis(cost, i_free[:, None], 1).sum()))
+
+
+# ---------------------------------------------------------------------------
+# slack budget == independent solve, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["clone", "sresume", "adaptive"])
+def test_slack_budget_recovers_solve_jobs_bitwise(sla_specs, strategy):
+    """At lam = 0 the priced score is IEEE-identical to U, so every field
+    of the solve tuple matches the independent solver bit for bit."""
+    ind = solve_jobs(strategy, sla_specs, 9)
+    (r, ch, u, p, c, sat), info = solve_jobs_coupled(
+        strategy, sla_specs, 9, 1e12)
+    for a, b in zip(ind, (r, ch, u, p, c, sat)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(info.lam) == 0.0
+    assert not bool(info.binding) and bool(info.feasible)
+
+
+@pytest.mark.parametrize("strategy", ["clone", "sresume"])
+def test_slack_budget_run_is_bitwise_unbudgeted(jobs120, strategy):
+    a = run_strategy(KEY, jobs120, strategy, P, theta=1e-3, max_r=8)
+    b = run_strategy(KEY, jobs120, strategy, P, theta=1e-3, max_r=8,
+                     budget=1e12)
+    np.testing.assert_array_equal(np.asarray(a.r_opt), np.asarray(b.r_opt))
+    assert float(a.result.pocd) == float(b.result.pocd)
+    assert float(a.result.mean_cost) == float(b.result.mean_cost)
+    assert a.coupled is None and b.coupled is not None
+
+
+# ---------------------------------------------------------------------------
+# binding budget: feasibility + dominance (the PR's acceptance numbers)
+# ---------------------------------------------------------------------------
+
+
+def test_binding_budget_feasible_and_binding(sla_specs):
+    (r, *_), info = solve_jobs_coupled("clone", sla_specs, 9, BUDGET)
+    assert bool(info.feasible) and bool(info.binding)
+    assert float(info.spend) <= BUDGET
+    assert float(info.spend_free) > BUDGET
+    assert float(info.lam) > 0.0
+
+
+def test_coupled_beats_baselines_on_total_utility(sla_specs):
+    """Acceptance: at the pinned binding budget the dual selection's total
+    net utility beats the repaired-independent baseline and both
+    competitive cloning policies (all scored on the SAME clone grids and
+    all within budget)."""
+    U, E = utility_cost_grids(get("clone"), sla_specs, 9)
+    cost = np.asarray(E) * np.asarray(sla_specs.C)[:, None]
+
+    def spend_of(i):
+        return float(np.take_along_axis(cost, np.asarray(i)[:, None],
+                                        1).sum())
+
+    (i_dual, *_), _ = solve_jobs_coupled("clone", sla_specs, 9, BUDGET)
+    tot_dual = total_utility(U, i_dual)
+    assert spend_of(i_dual) <= BUDGET
+
+    i_rep = repair_independent(U, E, sla_specs.C, BUDGET)
+    assert spend_of(i_rep) <= BUDGET
+    assert tot_dual >= total_utility(U, i_rep)
+
+    for name in ("clone_prop", "clone_sjf"):
+        (i_c, *_), inf_c = solve_jobs_coupled(name, sla_specs, 9, BUDGET)
+        assert bool(inf_c.feasible), name
+        assert spend_of(i_c) <= BUDGET, name
+        assert tot_dual > total_utility(U, i_c), name
+
+
+def test_tighter_budget_never_raises_utility(sla_specs):
+    U, E = utility_cost_grids(get("clone"), sla_specs, 9)
+    lo, hi = _band("clone", sla_specs)
+    totals = []
+    for frac in (0.2, 0.5, 0.8, 1.2):
+        b = lo + frac * (hi - lo)
+        (i, *_), _ = solve_jobs_coupled("clone", sla_specs, 9, b)
+        totals.append(total_utility(U, i))
+    assert totals == sorted(totals), totals
+
+
+def test_infeasible_budget_returns_min_cost_and_warns(jobs120):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = run_strategy(KEY, jobs120, "sresume", P, theta=1e-3,
+                           budget=1.0)
+    assert not bool(out.coupled.feasible)
+    assert any("no selection meets the budget" in str(x.message)
+               for x in w if x.category is RuntimeWarning)
+
+
+def test_baseline_strategy_rejects_budget(sla_specs):
+    with pytest.raises(ValueError, match="baseline"):
+        solve_jobs_coupled("hadoop_ns", sla_specs, 9, 1e6)
+
+
+# ---------------------------------------------------------------------------
+# competitive specs: registry plumbing + unbudgeted identity with clone
+# ---------------------------------------------------------------------------
+
+
+def test_competitive_specs_run_as_clone_without_budget(jobs120):
+    """clone_prop/clone_sjf reuse clone's closed forms and draw closure:
+    under the SAME key and no budget they are exactly clone."""
+    ref = run_strategy(KEY, jobs120, "clone", P, theta=1e-3, max_r=8)
+    for name in ("clone_prop", "clone_sjf"):
+        o = run_strategy(KEY, jobs120, name, P, theta=1e-3, max_r=8)
+        np.testing.assert_array_equal(np.asarray(ref.r_opt),
+                                      np.asarray(o.r_opt))
+        assert float(ref.result.pocd) == float(o.result.pocd), name
+
+
+def test_competitive_allocation_policies_differ_under_budget(sla_specs):
+    """At a binding budget the three policies pick different selections —
+    the baselines are live comparisons, not aliases of the dual solve."""
+    picks = {}
+    for name in ("clone", "clone_prop", "clone_sjf"):
+        (i, *_), _ = solve_jobs_coupled(name, sla_specs, 9, BUDGET)
+        picks[name] = np.asarray(i)
+    assert not np.array_equal(picks["clone"], picks["clone_prop"])
+    assert not np.array_equal(picks["clone"], picks["clone_sjf"])
+
+
+# ---------------------------------------------------------------------------
+# budget through the capacity engine and the fleet (global lambda)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_budget_feasible_and_slack_identity(jobs120):
+    ref = run_cluster_strategy(KEY, jobs120, "sresume", P, slots=300,
+                               theta=1e-3, max_r=8)
+    slack = run_cluster_strategy(KEY, jobs120, "sresume", P, slots=300,
+                                 theta=1e-3, max_r=8, budget=1e12)
+    assert float(ref.result.pocd) == float(slack.result.pocd)
+    np.testing.assert_array_equal(np.asarray(ref.r_opt),
+                                  np.asarray(slack.r_opt))
+    specs = jobspecs_of(jobs120, P, 1e-3, 0.0)
+    lo, hi = _band("sresume", specs)
+    b = lo + 0.5 * (hi - lo)
+    out = run_cluster_strategy(KEY, jobs120, "sresume", P, slots=300,
+                               theta=1e-3, max_r=8, budget=b)
+    assert bool(out.coupled.feasible)
+    assert float(out.coupled.spend) <= b
+
+
+def test_fleet_chunked_matches_monolithic_under_budget(jobs120):
+    """The multiplier is solved ONCE globally, so chunked streaming
+    replays slices of one selection — bitwise equal to the unchunked
+    run, unlike a per-chunk re-solve (chunk-local lambdas) would be."""
+    from repro.fleet import run_fleet_strategy
+    specs = jobspecs_of(jobs120, P, 1e-3, 0.0)
+    lo, hi = _band("sresume", specs)
+    b = lo + 0.5 * (hi - lo)
+    mono = run_fleet_strategy(KEY, jobs120, "sresume", P, theta=1e-3,
+                              max_r=8, budget=b, block_jobs=40)
+    chunked = run_fleet_strategy(KEY, jobs120, "sresume", P, theta=1e-3,
+                                 max_r=8, budget=b, chunk_jobs=40,
+                                 block_jobs=40)
+    np.testing.assert_array_equal(np.asarray(mono.r_opt),
+                                  np.asarray(chunked.r_opt))
+    assert float(mono.result.pocd) == float(chunked.result.pocd)
+    assert float(mono.coupled.lam) == float(chunked.coupled.lam)
+    assert float(mono.coupled.spend) <= b
+
+
+def test_fleet_cluster_chunked_matches_monolithic_under_budget(jobs120):
+    from repro.fleet import run_cluster_fleet_strategy
+    specs = jobspecs_of(jobs120, P, 1e-3, 0.0)
+    lo, hi = _band("sresume", specs)
+    b = lo + 0.5 * (hi - lo)
+    mono = run_cluster_fleet_strategy(KEY, jobs120, "sresume", P,
+                                      slots=300, theta=1e-3, max_r=8,
+                                      budget=b)
+    chunked = run_cluster_fleet_strategy(KEY, jobs120, "sresume", P,
+                                         slots=300, theta=1e-3, max_r=8,
+                                         budget=b, chunk_jobs=40)
+    np.testing.assert_array_equal(np.asarray(mono.r_opt),
+                                  np.asarray(chunked.r_opt))
+    assert float(mono.coupled.lam) == float(chunked.coupled.lam)
+
+
+def test_fleet_budget_rejects_chaos(jobs120):
+    from repro.chaos import FaultPlan
+    from repro.fleet import run_fleet_strategy
+    with pytest.raises(ValueError, match="chaos-free"):
+        run_fleet_strategy(KEY, jobs120, "sresume", P, budget=1e6,
+                           chaos=FaultPlan())
+
+
+# ---------------------------------------------------------------------------
+# RunConfig / simulate routing
+# ---------------------------------------------------------------------------
+
+
+def test_runconfig_budget_routes_flat_and_capacity(jobs120):
+    cfg = RunConfig(theta=1e-3, budget=1e12,
+                    strategies=("hadoop_ns", "sresume"))
+    outs, _ = simulate(KEY, jobs120, P, cfg=cfg)
+    assert outs["sresume"].coupled is not None
+    assert float(outs["sresume"].coupled.lam) == 0.0
+    outs_c, _ = simulate(KEY, jobs120, P, cfg=cfg.replace(slots=300))
+    assert outs_c["sresume"].coupled is not None
+    # baselines never budget
+    assert outs["hadoop_ns"].coupled is None
+
+
+def test_runconfig_budget_rejects_serve(jobs120):
+    with pytest.raises(ValueError, match="offline"):
+        simulate(KEY, jobs120, P, cfg=RunConfig(budget=1e6, serve=True))
+
+
+# The dual solver's property-based tests (budget feasibility, lam -> 0
+# bitwise recovery, budget monotonicity) live in tests/test_properties.py
+# — hypothesis is an optional extra and this module must not skip with it.

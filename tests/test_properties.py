@@ -158,3 +158,66 @@ def test_capacity_metrics_histogram_mass(n_units, seed, inactive_frac):
     assert int(m.depth_hist.sum()) == int(m.n_dispatched) == int(active.sum())
     assert int(m.busy_windows.sum()) <= int(m.n_dispatched)
     assert int(m.depth_max) <= int(active.sum())
+
+
+# ---------------------------------------------------------------------------
+# cluster-wide joint solver (repro.coupled): dual bisection invariants
+# ---------------------------------------------------------------------------
+
+_J, _R = 8, 6
+# fixed shapes keep every example on one compiled fori_loop cache entry
+grid_floats = st.lists(st.floats(-100.0, 0.0, allow_nan=False, width=32),
+                       min_size=_J * _R, max_size=_J * _R)
+cost_floats = st.lists(st.floats(1.0, 1000.0, allow_nan=False, width=32),
+                       min_size=_J * _R, max_size=_J * _R)
+
+
+def _dual_grids(u, c):
+    U = jnp.asarray(np.asarray(u, np.float32).reshape(_J, _R))
+    cost = jnp.asarray(np.asarray(c, np.float32).reshape(_J, _R))
+    return U, cost
+
+
+@settings(max_examples=40, deadline=None)
+@given(grid_floats, cost_floats, st.floats(0.0, 1.0))
+def test_dual_selection_feasible_whenever_possible(u, c, frac):
+    """Any budget between the min-cost spend and the free spend is met by
+    the solved lam's selection (the bisection keeps the feasible end)."""
+    from repro.coupled import dual_lambda, spend_at
+    U, cost = _dual_grids(u, c)
+    lo = float(jnp.sum(jnp.min(cost, axis=1)))
+    hi = max(float(spend_at(U, cost, 0.0)), lo)
+    budget = lo + frac * (hi - lo)
+    lam, feasible = dual_lambda(U, cost, budget)
+    assert bool(feasible)
+    # float32 bisection: within one part in ~1e6 of the cap
+    assert float(spend_at(U, cost, lam)) <= budget * (1 + 1e-6) + 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(grid_floats, cost_floats)
+def test_dual_slack_budget_gives_lam_zero_bitwise(u, c):
+    """A slack budget returns lam = 0 exactly, whose selection is the
+    independent argmax bit for bit (U - 0 * cost is IEEE-identical to U)."""
+    from repro.coupled import dual_lambda, select_at, spend_at
+    U, cost = _dual_grids(u, c)
+    budget = float(spend_at(U, cost, 0.0)) * 1.5 + 1.0
+    lam, feasible = dual_lambda(U, cost, budget)
+    assert float(lam) == 0.0 and bool(feasible)
+    np.testing.assert_array_equal(np.asarray(select_at(U, cost, lam)),
+                                  np.asarray(jnp.argmax(U, axis=-1)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(grid_floats, cost_floats, st.floats(0.05, 0.95),
+       st.floats(0.05, 0.95))
+def test_dual_total_utility_monotone_in_budget(u, c, f1, f2):
+    """A bigger budget never lowers the dual selection's total utility."""
+    from repro.coupled import dual_lambda, select_at, spend_at, total_utility
+    U, cost = _dual_grids(u, c)
+    lo = float(jnp.sum(jnp.min(cost, axis=1)))
+    hi = max(float(spend_at(U, cost, 0.0)), lo + 1.0)
+    b1, b2 = sorted((lo + f1 * (hi - lo), lo + f2 * (hi - lo)))
+    t1 = total_utility(U, select_at(U, cost, dual_lambda(U, cost, b1)[0]))
+    t2 = total_utility(U, select_at(U, cost, dual_lambda(U, cost, b2)[0]))
+    assert t2 >= t1 - 1e-4

@@ -79,13 +79,15 @@ def test_registry_names_order_and_kinds():
     """The historical six come first (stable PRNG key indices); the IR
     additions append. Kind filters partition the registry."""
     assert names()[:6] == LEGACY
-    assert set(names()) == set(LEGACY) | {"hedge", "adaptive"}
-    assert names(kind="chronos") == ("clone", "srestart", "sresume")
+    assert set(names()) == set(LEGACY) | {"hedge", "adaptive",
+                                          "clone_prop", "clone_sjf"}
+    assert names(kind="chronos") == ("clone", "srestart", "sresume",
+                                     "clone_prop", "clone_sjf")
     assert set(names(kind="baseline")) == {"hadoop_ns", "hadoop_s", "mantri",
                                            "hedge"}
     assert names(kind="meta") == ("adaptive",)
     assert names(kind="optimized") == ("clone", "srestart", "sresume",
-                                       "adaptive")
+                                       "adaptive", "clone_prop", "clone_sjf")
     for i, n in enumerate(names()):
         assert index_of(n) == i
 
@@ -111,7 +113,7 @@ def test_spec_contract():
     assert {n: get(n).race for n in names()} == {
         "hadoop_ns": False, "hadoop_s": True, "mantri": True, "hedge": True,
         "clone": False, "srestart": False, "sresume": False,
-        "adaptive": False}
+        "adaptive": False, "clone_prop": False, "clone_sjf": False}
     with pytest.raises(ValueError, match="closed-forms"):
         register(StrategySpec(name="broken", kind="chronos", race=False,
                               detectable=False, draw=lambda *a, **k: None,
